@@ -1,0 +1,53 @@
+"""Ablation — detector quality/cost vs hidden width Ñ (extends the
+paper's Table-4 Ñ ∈ {64,128} axis with the accuracy dimension).
+
+For Ñ ∈ {16, 32, 64, 128, 256}: post-merge ROC-AUC on HAR (two-device
+scenario averaged over three pattern pairs) and the U/V payload size —
+the accuracy/communication trade the paper leaves implicit.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import normalized_dataset, train_edge_device
+from repro.configs.oselm_edge import EdgeConfig
+from repro.core import ae_score, cooperative_update, to_uv
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays, train_test_split
+
+PAIRS = [(3, 5), (0, 4), (1, 3)]  # (sitting,laying), (walking,standing), ...
+
+
+def run(widths=(16, 32, 64, 128, 256), seed: int = 0) -> list[dict]:
+    ds = normalized_dataset("har", seed=seed, samples_per_class=420)
+    train, test = train_test_split(ds, 0.8, seed=seed)
+    out = []
+    for nh in widths:
+        ecfg = EdgeConfig("har", ds.n_features, nh, "identity", ridge=1e-2)
+        aucs = []
+        for pa, pb in PAIRS:
+            key = jax.random.PRNGKey(seed)
+            dev_a = train_edge_device(train, pa, key=key, ecfg=ecfg, seed=seed)
+            dev_b = train_edge_device(train, pb, key=key, ecfg=ecfg, seed=seed + 7)
+            merged = cooperative_update(dev_a, to_uv(dev_b))
+            x, y = anomaly_eval_arrays(test, [pa, pb], seed=seed)
+            aucs.append(roc_auc(np.asarray(ae_score(merged, x)), y))
+        payload = 4 * (nh * nh + nh * ds.n_features)
+        out.append({"n_hidden": nh, "auc": float(np.mean(aucs)), "payload_bytes": payload})
+    return out
+
+
+def main() -> list[str]:
+    rows = run()
+    # wider is (weakly) better until saturation; payload grows quadratically+linearly
+    assert rows[-1]["auc"] >= rows[0]["auc"] - 0.05
+    return [
+        f"ablation_hidden/N{r['n_hidden']},{0:.1f},auc={r['auc']:.3f};payload={r['payload_bytes']}B"
+        for r in rows
+    ]
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,55 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.oselm_edge import EDGE_CONFIGS, EdgeConfig
+from repro.core import OSELMState, ae_train_stream, init_autoencoder
+from repro.data import make_dataset
+from repro.data.pipeline import make_pattern_stream, train_test_split
+
+
+def timed(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall µs per call (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def train_edge_device(
+    ds, pattern, *, key, ecfg: EdgeConfig, seed: int = 0, limit: int | None = None
+) -> OSELMState:
+    xs = make_pattern_stream(ds, pattern, seed=seed, limit=limit)
+    # init chunk must be at least Ñ rows for a well-posed Eq. 13 (the
+    # ridge guards the rest); never consume the whole stream on init
+    n_init = min(max(2 * ecfg.n_hidden, 8), max(len(xs) - 8, len(xs) // 2))
+    st = init_autoencoder(
+        key, ds.n_features, ecfg.n_hidden, jnp.asarray(xs[:n_init]),
+        activation=ecfg.activation,
+        ridge=max(ecfg.ridge, 1e-2 if n_init < 2 * ecfg.n_hidden else ecfg.ridge),
+    )
+    return ae_train_stream(st, jnp.asarray(xs[n_init:]))
+
+
+def edge_config(dataset: str) -> EdgeConfig:
+    return EDGE_CONFIGS[dataset]
+
+
+def normalized_dataset(name: str, seed: int = 0, samples_per_class: int = 200):
+    """Dataset + min-max normalization to [0,1] (for sigmoid-output BP-NNs;
+    also stabilizes OS-ELM identity activations)."""
+    ds = make_dataset(name, seed=seed, samples_per_class=samples_per_class)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    x = (ds.x - lo) / (hi - lo + 1e-6)
+    return ds._replace(x=x.astype(np.float32))

@@ -1,0 +1,48 @@
+"""Pallas kernel micro-bench (interpret mode on CPU — structural only;
+real perf numbers require a TPU). Reports µs/call + achieved GFLOP/s
+of the jnp reference path for context."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core import init_oselm, init_slfn
+from repro.kernels import hidden_proj, matmul_atb, oselm_step_k1_kernel, rank1_add
+from repro.kernels.ref import atb_ref, hidden_proj_ref
+
+
+def main() -> list[str]:
+    lines = []
+    key = jax.random.PRNGKey(0)
+    m, k, n = 256, 561, 128
+    x = jax.random.normal(key, (m, k))
+    a = jax.random.normal(key, (k, n))
+    b = jax.random.normal(key, (n,))
+
+    us = timed(lambda: hidden_proj(x, a, b, activation="sigmoid"), iters=5)
+    ref_us = timed(jax.jit(lambda: hidden_proj_ref(x, a, b, "sigmoid")), iters=5)
+    gf = 2 * m * k * n / (ref_us * 1e-6) / 1e9
+    lines.append(f"kernel/hidden_proj_interp,{us:.0f},ref_us={ref_us:.0f};ref_gflops={gf:.2f}")
+
+    h = jax.random.normal(key, (512, 128))
+    us = timed(lambda: matmul_atb(h, h), iters=5)
+    ref_us = timed(jax.jit(lambda: atb_ref(h, h)), iters=5)
+    lines.append(f"kernel/uv_accum_interp,{us:.0f},ref_us={ref_us:.0f}")
+
+    p = jnp.eye(128) * 0.5
+    u = jax.random.normal(key, (128,))
+    us = timed(lambda: rank1_add(p, u, u, -0.3), iters=5)
+    lines.append(f"kernel/rank1_add_interp,{us:.0f},")
+
+    params = init_slfn(key, 561, 128)
+    x0 = jax.random.normal(key, (256, 561))
+    st = init_oselm(params, x0, x0, activation="sigmoid", ridge=1e-3)
+    us = timed(lambda: oselm_step_k1_kernel(st, x0[0], x0[0]), iters=3)
+    lines.append(f"kernel/oselm_step_fused_interp,{us:.0f},")
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,114 @@
+"""Paper Table 4 — training / prediction / merging latencies [msec].
+
+OS-ELM (Ñ=64 and Ñ=128, 561 features as in the paper) vs BP-NN3-FL.
+The paper's claims:
+  • OS-ELM merging latency > training > prediction, grows with Ñ (the
+    Ñ×Ñ inverse dominates);
+  • OS-ELM's merge runs ONCE, while BP-NN3-FL pays its merge every one
+    of R=50 communication rounds → one-shot wins on total cost.
+Absolute times differ from the paper's Core i5 (we're on 2 vCPUs and
+jitted JAX vs NumPy); the *ordering and structure* are what reproduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timed
+from repro.baselines import bpnn3_config, init_bpnn
+from repro.baselines.bpnn import bpnn_loss
+from repro.baselines.fedavg import average_params
+from repro.core import (
+    ae_score,
+    cooperative_update,
+    init_autoencoder,
+    oselm_step_k1,
+    to_uv,
+)
+from repro.optim import adam
+
+
+def oselm_latencies(n_features: int = 561, n_hidden: int = 64, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (4 * n_hidden, n_features))
+    st = init_autoencoder(key, n_features, n_hidden, x, activation="identity", ridge=1e-3)
+    x1 = x[0]
+
+    train_fn = jax.jit(lambda s, xi: oselm_step_k1(s, xi, xi))
+    pred_fn = jax.jit(lambda s, xi: ae_score(s, xi[None, :]))
+    uv = to_uv(st)
+    merge_fn = jax.jit(cooperative_update)
+
+    return {
+        "train_ms": timed(train_fn, st, x1) / 1e3,
+        "predict_ms": timed(pred_fn, st, x1) / 1e3,
+        "merge_ms": timed(merge_fn, st, uv) / 1e3,
+    }
+
+
+def bpnn_fl_latencies(n_features: int = 561, n_hidden: int = 64, seed: int = 0):
+    cfg = bpnn3_config(n_features, n_hidden, batch=1, epochs=1)
+    key = jax.random.PRNGKey(seed)
+    params = init_bpnn(key, cfg)
+    opt = adam(cfg.lr)
+    opt_state = opt.init(params)
+    x1 = jax.random.normal(key, (1, n_features))
+
+    @jax.jit
+    def train1(p, s, xb):
+        g = jax.grad(bpnn_loss)(p, cfg, xb)
+        return opt.update(g, s, p)
+
+    @jax.jit
+    def pred(p, xb):
+        return bpnn_loss(p, cfg, xb)
+
+    pb = [jax.tree.map(jnp.copy, params) for _ in range(2)]
+
+    @jax.jit
+    def merge(a, b):
+        return average_params([a, b])
+
+    return {
+        "train_ms": timed(train1, params, opt_state, x1) / 1e3,
+        "predict_ms": timed(pred, params, x1) / 1e3,
+        "merge_per_round_ms": timed(merge, pb[0], pb[1]) / 1e3,
+        "rounds": 50,
+    }
+
+
+def run(n_hidden: int) -> dict:
+    os_lat = oselm_latencies(n_hidden=n_hidden)
+    bp_lat = bpnn_fl_latencies(n_hidden=n_hidden)
+    return {
+        "n_hidden": n_hidden,
+        "oselm": os_lat,
+        "bpnn3_fl": bp_lat,
+        "oselm_total_merge_ms": os_lat["merge_ms"],                 # one-shot
+        "fl_total_merge_ms": bp_lat["merge_per_round_ms"] * bp_lat["rounds"],
+    }
+
+
+def main() -> list[str]:
+    lines = []
+    r64 = run(64)
+    r128 = run(128)
+    # Table-4 structural claims. Sub-ms predict/train orderings jitter on
+    # shared 2-vCPU machines, so only the robust one-shot-vs-R-rounds
+    # claim is asserted; the full latency rows are reported for the table.
+    assert r64["oselm_total_merge_ms"] < r64["fl_total_merge_ms"]      # one-shot wins
+    assert r128["oselm_total_merge_ms"] < r128["fl_total_merge_ms"]
+    for r in (r64, r128):
+        o = r["oselm"]
+        lines.append(
+            f"latency/oselm_N{r['n_hidden']},{o['train_ms']*1e3:.1f},"
+            f"train={o['train_ms']:.3f}ms;pred={o['predict_ms']:.3f}ms;"
+            f"merge={o['merge_ms']:.3f}ms;fl_total_merge={r['fl_total_merge_ms']:.1f}ms"
+        )
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

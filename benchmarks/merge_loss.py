@@ -1,0 +1,79 @@
+"""Paper Figs. 6/7 — loss values before/after the cooperative model update.
+
+Scenario (§5.2): Device-A trains on pattern p_A, Device-B on p_B; after
+A merges B's intermediate results, p_B's loss on A collapses while p_A
+stays low. Run for the driving dataset (normal vs aggressive) and the
+HAR dataset (sitting vs laying), plus BP-NN3 reference bars.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import edge_config, normalized_dataset, train_edge_device, timed
+from repro.core import ae_score, cooperative_update, to_uv
+from repro.data.pipeline import train_test_split
+
+
+SCENARIOS = {
+    "driving": ("normal", "aggressive"),
+    "har": ("sitting", "laying"),
+}
+
+
+def run(dataset: str = "driving", seed: int = 0) -> dict:
+    ds = normalized_dataset(dataset, seed=seed)
+    train, test = train_test_split(ds, 0.8, seed=seed)
+    ecfg = edge_config(dataset)
+    p_a, p_b = SCENARIOS[dataset]
+    key = jax.random.PRNGKey(seed)
+
+    dev_a = train_edge_device(train, p_a, key=key, ecfg=ecfg, seed=seed)
+    dev_b = train_edge_device(train, p_b, key=key, ecfg=ecfg, seed=seed + 1)
+
+    rows = {}
+    for pat in test.class_names:
+        x = test.pattern(pat)[:64]
+        rows[pat] = {
+            "A_before": float(ae_score(dev_a, x).mean()),
+            "B": float(ae_score(dev_b, x).mean()),
+        }
+    merged = cooperative_update(dev_a, to_uv(dev_b))
+    for pat in test.class_names:
+        x = test.pattern(pat)[:64]
+        rows[pat]["A_after"] = float(ae_score(merged, x).mean())
+
+    # the paper's claims, checked mechanically. Note the driving
+    # 'aggressive' pattern is intrinsically high-entropy (volatile
+    # Markov process → noisy transition tables), so the post-merge loss
+    # is compared against Device-B's own loss (perfect knowledge
+    # transfer) rather than an absolute collapse factor.
+    claims = {
+        # A inherits B's competence on p_B (Fig. 6/7 red bar ≈ blue bar)
+        "pB_transferred": rows[p_b]["A_after"] < 2.0 * rows[p_b]["B"] + 1e-6,
+        # and improves substantially over its own pre-merge loss
+        "pB_improved": rows[p_b]["A_after"] < 0.6 * rows[p_b]["A_before"],
+        # p_A stays normal (may rise slightly — Fig. 6 note)
+        "pA_stays_low": rows[p_a]["A_after"] < 3 * max(rows[p_a]["A_before"], 1e-6),
+    }
+    return {"dataset": dataset, "rows": rows, "claims": claims}
+
+
+def main() -> list[str]:
+    lines = []
+    for dsname in SCENARIOS:
+        out = run(dsname)
+        ok = all(out["claims"].values())
+        p_a, p_b = SCENARIOS[dsname]
+        r = out["rows"][p_b]
+        lines.append(
+            f"merge_loss/{dsname},{0:.1f},"
+            f"pB_before={r['A_before']:.4f};pB_after={r['A_after']:.4f};claims_ok={ok}"
+        )
+        assert ok, f"paper claim violated: {out}"
+    return lines
+
+
+if __name__ == "__main__":
+    for l in main():
+        print(l)

@@ -1,0 +1,131 @@
+"""Paper Figs. 8–17 — ROC-AUC grids before/after the cooperative model
+update vs BP-NN3 / BP-NN5 / BP-NN3-FL, for HAR-like and MNIST-like data.
+
+For every ordered pattern pair (p_A, p_B): train A on p_A and B on p_B,
+evaluate ROC-AUC on A before and after merging B (trained patterns =
+normal, subsampled others = anomalous, §5.3.1), and compare the grid
+average with the BP-NN baselines trained on {p_A, p_B} jointly.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import edge_config, normalized_dataset, train_edge_device
+from repro.baselines import (
+    bpnn3_config,
+    bpnn5_config,
+    bpnn_score,
+    run_fedavg,
+    train_bpnn,
+)
+from repro.baselines.fedavg import FedAvgConfig
+from repro.core import ae_score, cooperative_update, to_uv
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays, make_pattern_stream, train_test_split
+
+
+def oselm_grids(train, test, ecfg, *, trials: int = 3, seed: int = 0):
+    n = train.n_classes
+    before = np.zeros((n, n))
+    after = np.zeros((n, n))
+    for pa, pb in itertools.product(range(n), range(n)):
+        aucs_b, aucs_a = [], []
+        for t in range(trials):
+            key = jax.random.PRNGKey(seed * 977 + t)
+            dev_a = train_edge_device(train, pa, key=key, ecfg=ecfg, seed=seed + t)
+            dev_b = train_edge_device(train, pb, key=key, ecfg=ecfg, seed=seed + t + 7)
+            x, y = anomaly_eval_arrays(test, [pa, pb], seed=seed + t)
+            aucs_b.append(roc_auc(np.asarray(ae_score(dev_a, x)), y))
+            merged = cooperative_update(dev_a, to_uv(dev_b))
+            aucs_a.append(roc_auc(np.asarray(ae_score(merged, x)), y))
+        before[pa, pb] = np.mean(aucs_b)
+        after[pa, pb] = np.mean(aucs_a)
+    return before, after
+
+
+def bpnn_grid(train, test, cfg_builder, *, trials: int = 2, seed: int = 0, fedavg=False):
+    n = train.n_classes
+    grid = np.zeros((n, n))
+    for pa, pb in itertools.product(range(n), range(n)):
+        aucs = []
+        for t in range(trials):
+            key = jax.random.PRNGKey(seed * 31 + t)
+            xa = make_pattern_stream(train, pa, seed=seed + t)
+            xb = make_pattern_stream(train, pb, seed=seed + t + 7)
+            cfg = cfg_builder(train.n_features)
+            if fedavg:
+                params = run_fedavg(
+                    key, cfg, [jnp.asarray(xa), jnp.asarray(xb)],
+                    FedAvgConfig(rounds=8, local_epochs=1),
+                )
+            else:
+                xab = jnp.asarray(np.concatenate([xa, xb]))
+                params = train_bpnn(key, cfg, xab)
+            x, y = anomaly_eval_arrays(test, [pa, pb], seed=seed + t)
+            aucs.append(roc_auc(np.asarray(bpnn_score(params, cfg, jnp.asarray(x))), y))
+        grid[pa, pb] = np.mean(aucs)
+    return grid
+
+
+def run(dataset: str = "har", *, trials: int = 2, seed: int = 0,
+        include_bpnn5: bool = True, include_fl: bool = True) -> dict:
+    ds = normalized_dataset(dataset, seed=seed, samples_per_class=420)
+    train, test = train_test_split(ds, 0.8, seed=seed)
+    ecfg = edge_config(dataset)
+
+    before, after = oselm_grids(train, test, ecfg, trials=trials, seed=seed)
+    res = {
+        "dataset": dataset,
+        "avg_before": float(before.mean()),
+        "avg_after": float(after.mean()),
+    }
+
+    n1 = 64 if dataset == "mnist_like" else 256
+    bp3 = bpnn_grid(train, test, lambda f: bpnn3_config(f, n1, batch=8, epochs=4),
+                    trials=1, seed=seed)
+    res["avg_bpnn3"] = float(bp3.mean())
+    if include_bpnn5:
+        bp5 = bpnn_grid(
+            train, test,
+            lambda f: bpnn5_config(f, n1, n1 // 2, n1, batch=8, epochs=4),
+            trials=1, seed=seed,
+        )
+        res["avg_bpnn5"] = float(bp5.mean())
+    if include_fl:
+        fl = bpnn_grid(train, test, lambda f: bpnn3_config(f, n1, batch=8, epochs=1),
+                       trials=1, seed=seed, fedavg=True)
+        res["avg_bpnn3_fl"] = float(fl.mean())
+
+    res["grids"] = {"before": before.tolist(), "after": after.tolist()}
+    return res
+
+
+def main(quick: bool = True) -> list[str]:
+    lines = []
+    for dsname in (["har"] if quick else ["har", "mnist_like"]):
+        r = run(dsname, trials=1, include_bpnn5=not quick, include_fl=not quick)
+        # paper claims: merge lifts AUC substantially and lands near BP-NN3
+        lift = r["avg_after"] - r["avg_before"]
+        near_bp = abs(r["avg_after"] - r["avg_bpnn3"]) < 0.12
+        lines.append(
+            f"rocauc_grid/{dsname},{0:.1f},"
+            f"before={r['avg_before']:.3f};after={r['avg_after']:.3f};"
+            f"bpnn3={r['avg_bpnn3']:.3f};lift={lift:.3f};near_bp={near_bp}"
+        )
+        assert lift > 0.03, r
+    return lines
+
+
+if __name__ == "__main__":
+    import json, sys
+    quick = "--full" not in sys.argv
+    if quick:
+        for l in main(quick=True):
+            print(l)
+    else:
+        for ds in ("har", "mnist_like"):
+            print(json.dumps(run(ds, trials=3), indent=1))

@@ -1,0 +1,64 @@
+"""§Roofline report — renders the dry-run JSON artifacts into the
+EXPERIMENTS.md roofline table (one row per arch × shape × mesh)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_records() -> list[dict]:
+    recs = []
+    if not ARTIFACTS.exists():
+        return recs
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        try:
+            recs.append(json.loads(f.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def render_table(recs: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | t_compute | t_memory | t_mem(fused attn) "
+        "| t_collective | dominant | useful FLOPs | HBM/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    skips = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            skips.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| — | — | — | — | SKIP: {r.get('reason','')[:60]} | — | — |")
+            continue
+        if r.get("status") != "ok":
+            continue
+        mem = r.get("per_device_memory", {})
+        hbm = (mem.get("temp_bytes", 0) + mem.get("argument_bytes", 0)) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']*1e3:.1f} ms | {r['t_memory_s']*1e3:.1f} ms "
+            f"| {r.get('t_memory_fused_attn_s', r['t_memory_s'])*1e3:.1f} ms "
+            f"| {r['t_collective_s']*1e3:.1f} ms | {r['dominant']} "
+            f"| {min(r['useful_flops_ratio'],9.99):.2f} | {hbm:.1f} GB |"
+        )
+    return hdr + "\n".join(rows + skips)
+
+
+def main() -> list[str]:
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if not ok:
+        return ["roofline/report,0,no-artifacts-yet (run repro.launch.dryrun)"]
+    worst = min(ok, key=lambda r: r["useful_flops_ratio"])
+    return [
+        f"roofline/report,{len(ok):.1f},"
+        f"records={len(ok)};worst_useful={worst['arch']}/{worst['shape']}"
+        f"={worst['useful_flops_ratio']:.2f}"
+    ]
+
+
+if __name__ == "__main__":
+    print(render_table(load_records()))

@@ -1,0 +1,54 @@
+"""Benchmark harness — one entry per paper table/figure (+ ours).
+
+Prints ``name,us_per_call,derived`` CSV lines. Each module also asserts
+the paper's qualitative claims mechanically (a failed claim fails the
+harness).
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("merge_loss", "paper Fig. 6/7 — loss before/after cooperative update"),
+    ("rocauc_grid", "paper Figs. 8-17 — ROC-AUC vs BP-NN baselines"),
+    ("latency", "paper Table 4 — train/predict/merge latencies"),
+    ("convergence", "paper Fig. 18 — merge vs sequential training"),
+    ("mesh_merge", "ours — psum cooperative update on a device mesh"),
+    ("kernel_bench", "ours — Pallas kernel micro-bench (interpret)"),
+    ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),
+    ("roofline_report", "ours — dry-run roofline artifact summary"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name, desc in BENCHES:
+        if args.only and args.only != mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            for line in mod.main():
+                print(line, flush=True)
+            print(f"# {mod_name} ok in {time.time()-t0:.1f}s — {desc}", flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(mod_name)
+            print(f"# {mod_name} FAILED — {desc}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart — the paper in 60 seconds (CPU).
+
+Two edge devices train OS-ELM autoencoders on different normal patterns
+(non-IID); one cooperative model update (Eq. 8/15) merges them; both
+devices now recognize both patterns. Finishes with the ROC-AUC lift.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.core import ae_score
+from repro.data import make_har_dataset
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays, make_pattern_stream, train_test_split
+from repro.federated import EdgeDevice, FederationServer
+
+
+def main() -> None:
+    ds = make_har_dataset(seed=0, samples_per_class=300)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    ds = ds._replace(x=(ds.x - lo) / (hi - lo + 1e-6))
+    train, test = train_test_split(ds, 0.8, seed=0)
+
+    n_hidden = 64
+    key = jax.random.PRNGKey(0)
+
+    def build(device_id, pattern):
+        xs = make_pattern_stream(train, pattern, seed=1)
+        dev = EdgeDevice(device_id, key, ds.n_features, n_hidden, xs[:128], ridge=1e-3)
+        dev.train(xs[128:])
+        return dev
+
+    dev_a = build("A", "sitting")
+    dev_b = build("B", "laying")
+
+    x_eval, y_eval = anomaly_eval_arrays(test, [3, 5], seed=0)  # sitting, laying
+    auc_before = roc_auc(dev_a.score(x_eval), y_eval)
+
+    laying = test.pattern("laying")[:32]
+    print(f"loss of 'laying' on A before merge: {dev_a.score(laying).mean():.4f}")
+
+    # --- the cooperative model update (paper §4.2) -----------------------
+    server = FederationServer()
+    dev_a.share(server)
+    dev_b.share(server)
+    dev_a.merge_from(server, ["B"])          # one shot — no rounds
+    dev_b.merge_from(server, ["A"])
+
+    print(f"loss of 'laying' on A after merge:  {dev_a.score(laying).mean():.4f}")
+    auc_after = roc_auc(dev_a.score(x_eval), y_eval)
+    print(f"ROC-AUC on A: {auc_before:.3f} -> {auc_after:.3f}")
+    print(f"payload exchanged: {server.log.bytes_up} bytes up "
+          f"({server.log.uploads} uploads) — independent of data size")
+    assert auc_after >= auc_before
+    # A and B are identical now (paper §5.2.1)
+    np.testing.assert_allclose(
+        np.asarray(dev_a.state.beta), np.asarray(dev_b.state.beta), atol=1e-4
+    )
+    print("devices converged to the identical merged model ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+from repro.baselines.bpnn import (
+    BPNNConfig,
+    bpnn3_config,
+    bpnn5_config,
+    init_bpnn,
+    bpnn_predict,
+    bpnn_loss,
+    bpnn_score,
+    train_bpnn,
+)
+from repro.baselines.fedavg import FedAvgConfig, fedavg_round, run_fedavg
+
+__all__ = [
+    "BPNNConfig", "bpnn3_config", "bpnn5_config", "init_bpnn",
+    "bpnn_predict", "bpnn_loss", "bpnn_score", "train_bpnn",
+    "FedAvgConfig", "fedavg_round", "run_fedavg",
+]

@@ -1,0 +1,110 @@
+"""BP-NN autoencoder baselines (paper §5.1.2, Table 3).
+
+BP-NN3: 3-layer (one hidden) autoencoder — ReLU hidden, Sigmoid output,
+MSE loss, Adam. BP-NN5: 5-layer deep autoencoder (three hidden). These
+are the backpropagation comparison points for the OS-ELM results
+(Figs. 10/11/15/16) and the local model of the BP-NN3-FL federated
+baseline.
+
+Implemented in pure JAX (TensorFlow of the paper is unavailable and
+unnecessary — the architectures are plain MLPs).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.activations import get_activation
+from repro.optim import adam
+
+
+class BPNNConfig(NamedTuple):
+    n_features: int
+    hidden: tuple[int, ...]          # (Ñ1,) for BP-NN3; (Ñ1,Ñ2,Ñ3) for BP-NN5
+    g_hidden: str = "relu"
+    g_out: str = "sigmoid"
+    lr: float = 1e-3
+    batch: int = 8
+    epochs: int = 20
+
+
+def bpnn3_config(n_features: int, n1: int, *, batch: int = 8, epochs: int = 20) -> BPNNConfig:
+    return BPNNConfig(n_features, (n1,), batch=batch, epochs=epochs)
+
+
+def bpnn5_config(
+    n_features: int, n1: int, n2: int, n3: int, *, batch: int = 8, epochs: int = 20
+) -> BPNNConfig:
+    return BPNNConfig(n_features, (n1, n2, n3), batch=batch, epochs=epochs)
+
+
+def init_bpnn(key: jax.Array, cfg: BPNNConfig) -> list[dict]:
+    """Glorot-initialized MLP: n -> hidden... -> n."""
+    sizes = (cfg.n_features, *cfg.hidden, cfg.n_features)
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / (a + b))
+        params.append({"w": w, "b": jnp.zeros((b,))})
+    return params
+
+
+def bpnn_predict(params: Sequence[dict], cfg: BPNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    g_h = get_activation(cfg.g_hidden)
+    g_o = get_activation(cfg.g_out)
+    h = x
+    for layer in params[:-1]:
+        h = g_h(h @ layer["w"] + layer["b"])
+    return g_o(h @ params[-1]["w"] + params[-1]["b"])
+
+
+def bpnn_loss(params, cfg: BPNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    y = bpnn_predict(params, cfg, x)
+    return jnp.mean((x - y) ** 2)
+
+
+def bpnn_score(params, cfg: BPNNConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-sample reconstruction MSE — the anomaly score."""
+    y = bpnn_predict(params, cfg, x)
+    return jnp.mean((x - y) ** 2, axis=-1)
+
+
+def train_bpnn(
+    key: jax.Array,
+    cfg: BPNNConfig,
+    x_train: jnp.ndarray,
+    *,
+    params: Sequence[dict] | None = None,
+    epochs: int | None = None,
+) -> list[dict]:
+    """Mini-batch Adam training for ``epochs`` (paper: E epochs, batch k).
+
+    Uses a jitted scan over shuffled batches per epoch.
+    """
+    if params is None:
+        params = init_bpnn(key, cfg)
+    opt = adam(cfg.lr)
+    opt_state = opt.init(params)
+    n = x_train.shape[0]
+    nb = n // cfg.batch
+    epochs = cfg.epochs if epochs is None else epochs
+
+    @jax.jit
+    def epoch_fn(params, opt_state, xb):
+        def body(carry, batch):
+            p, s = carry
+            grads = jax.grad(bpnn_loss)(p, cfg, batch)
+            p, s = opt.update(grads, s, p)
+            return (p, s), None
+
+        (params, opt_state), _ = jax.lax.scan(body, (params, opt_state), xb)
+        return params, opt_state
+
+    for e in range(epochs):
+        key, k = jax.random.split(key)
+        perm = jax.random.permutation(k, n)[: nb * cfg.batch]
+        xb = x_train[perm].reshape(nb, cfg.batch, -1)
+        params, opt_state = epoch_fn(params, opt_state, xb)
+    return list(params)

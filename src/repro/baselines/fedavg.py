@@ -1,0 +1,57 @@
+"""BP-NN3-FL — the traditional federated learning baseline (paper §5.3.1).
+
+FedAvg [McMahan et al., ref 10]: each communication round, every client
+trains the shared global model locally on its own pattern, the server
+averages the locally trained parameter trees, and the average becomes
+the next round's global model. The paper runs R=50 rounds; the
+comparison point for the one-shot OS-ELM merge.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.bpnn import BPNNConfig, init_bpnn, train_bpnn
+
+
+class FedAvgConfig(NamedTuple):
+    rounds: int = 50
+    local_epochs: int = 1
+
+
+def average_params(trees: Sequence) -> list:
+    """The FedAvg server step: elementwise mean of client parameter trees."""
+    return jax.tree.map(lambda *xs: jnp.mean(jnp.stack(xs), axis=0), *trees)
+
+
+def fedavg_round(
+    key: jax.Array,
+    global_params,
+    cfg: BPNNConfig,
+    client_data: Sequence[jnp.ndarray],
+    local_epochs: int = 1,
+):
+    """One communication round: local train on each client, then average."""
+    locals_ = []
+    for ci, xc in enumerate(client_data):
+        key, k = jax.random.split(key)
+        p = train_bpnn(k, cfg, xc, params=jax.tree.map(jnp.copy, global_params), epochs=local_epochs)
+        locals_.append(p)
+    return average_params(locals_), key
+
+
+def run_fedavg(
+    key: jax.Array,
+    cfg: BPNNConfig,
+    client_data: Sequence[np.ndarray],
+    fl: FedAvgConfig = FedAvgConfig(),
+):
+    """Full BP-NN3-FL training: R rounds of local-train + average."""
+    client_data = [jnp.asarray(c) for c in client_data]
+    global_params = init_bpnn(key, cfg)
+    for _ in range(fl.rounds):
+        global_params, key = fedavg_round(key, global_params, cfg, client_data, fl.local_epochs)
+    return global_params

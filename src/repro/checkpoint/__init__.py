@@ -1,0 +1,3 @@
+from repro.checkpoint.npz_store import load_pytree, save_pytree, CheckpointManager
+
+__all__ = ["load_pytree", "save_pytree", "CheckpointManager"]

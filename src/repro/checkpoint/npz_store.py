@@ -1,0 +1,113 @@
+"""npz-based pytree checkpointing (orbax is unavailable offline).
+
+Flattens a pytree with ``jax.tree_util.tree_flatten_with_path``, stores
+leaves in a single compressed ``.npz`` plus a key manifest, and restores
+into an identical tree structure. Device arrays are fetched to host;
+restore re-places onto the default device (the training loop re-shards
+via its jitted step's in_shardings).
+
+Includes a small retention-managed ``CheckpointManager`` (keep-last-N,
+atomic rename) — enough substrate for the example training driver and
+the federated edge-device state (OS-ELM P/β are plain arrays).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "␟"  # symbol-for-unit-separator: never in key names
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            parts.append(str(e.key))
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            parts.append(str(e.idx))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            parts.append(str(e.name))
+        else:
+            parts.append(str(e))
+    return _SEP.join(parts)
+
+
+def save_pytree(tree: PyTree, path: str | os.PathLike) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for i, (kp, leaf) in enumerate(flat):
+        name = f"leaf_{i}"
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":  # bf16 etc. — npz can't store them
+            arr = arr.astype(np.float32)
+        arrays[name] = arr
+        keys.append(_path_str(kp))
+    tmp = tempfile.NamedTemporaryFile(
+        dir=path.parent, suffix=".tmp", delete=False
+    )
+    try:
+        np.savez_compressed(tmp, __keys__=np.asarray(json.dumps(keys)), **arrays)
+        tmp.close()
+        os.replace(tmp.name, path)  # atomic
+    finally:
+        if os.path.exists(tmp.name):
+            os.unlink(tmp.name)
+
+
+def load_pytree(template: PyTree, path: str | os.PathLike) -> PyTree:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    with np.load(path, allow_pickle=False) as data:
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files) - 1)]
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    if len(flat) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves; template expects {len(flat)}"
+        )
+    import jax.numpy as jnp
+
+    restored = [
+        jnp.asarray(l).astype(t.dtype) if hasattr(t, "dtype") else l
+        for l, t in zip(leaves, flat)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, *, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.keep = keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    def save(self, step: int, tree: PyTree) -> Path:
+        p = self.dir / f"ckpt_{step:08d}.npz"
+        save_pytree(tree, p)
+        self._gc()
+        return p
+
+    def latest_step(self) -> int | None:
+        steps = sorted(
+            int(p.stem.split("_")[1]) for p in self.dir.glob("ckpt_*.npz")
+        )
+        return steps[-1] if steps else None
+
+    def restore(self, template: PyTree, step: int | None = None) -> tuple[PyTree, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(template, self.dir / f"ckpt_{step:08d}.npz"), step
+
+    def _gc(self) -> None:
+        ckpts = sorted(self.dir.glob("ckpt_*.npz"))
+        for old in ckpts[: -self.keep]:
+            old.unlink()

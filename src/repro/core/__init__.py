@@ -1,0 +1,60 @@
+"""repro.core — the paper's primary contribution.
+
+ELM / OS-ELM sequential training, the E²LM intermediate form, and the
+one-shot cooperative model update (federated merge), plus the OS-ELM
+autoencoder anomaly detector the paper deploys on edge devices.
+"""
+from repro.core.activations import get_activation, register_activation
+from repro.core.autoencoder import (
+    DetectorBank,
+    ae_score,
+    ae_train_step,
+    ae_train_step_guarded,
+    ae_train_stream,
+    bank_score,
+    bank_train_instance,
+    init_autoencoder,
+    make_bank,
+)
+from repro.core.e2lm import (
+    UV,
+    cooperative_update,
+    from_uv,
+    to_uv,
+    uv_add,
+    uv_replace,
+    uv_sub,
+    uv_sum,
+)
+from repro.core.elm import (
+    ELMModel,
+    SLFNParams,
+    hidden,
+    init_slfn,
+    invert_u,
+    predict_elm,
+    solve_beta,
+    train_elm,
+)
+from repro.core.oselm import (
+    OSELMState,
+    init_oselm,
+    oselm_loss,
+    oselm_predict,
+    oselm_step,
+    oselm_step_k1,
+    oselm_train_sequential,
+)
+
+__all__ = [
+    "get_activation", "register_activation",
+    "DetectorBank", "ae_score", "ae_train_step", "ae_train_step_guarded",
+    "ae_train_stream", "bank_score", "bank_train_instance",
+    "init_autoencoder", "make_bank",
+    "UV", "cooperative_update", "from_uv", "to_uv", "uv_add",
+    "uv_replace", "uv_sub", "uv_sum",
+    "ELMModel", "SLFNParams", "hidden", "init_slfn", "invert_u",
+    "predict_elm", "solve_beta", "train_elm",
+    "OSELMState", "init_oselm", "oselm_loss", "oselm_predict",
+    "oselm_step", "oselm_step_k1", "oselm_train_sequential",
+]

@@ -1,0 +1,33 @@
+"""Activation registry for ELM/OS-ELM hidden layers.
+
+The paper (Table 3) uses Sigmoid for UAH-DriveSet and Identity for
+HAR/MNIST. We register both plus the usual suspects so configs can name
+them by string.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Activation = Callable[[jnp.ndarray], jnp.ndarray]
+
+_REGISTRY: dict[str, Activation] = {
+    "identity": lambda x: x,
+    "sigmoid": lambda x: 1.0 / (1.0 + jnp.exp(-x)),
+    "tanh": jnp.tanh,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "gelu": lambda x: 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3))),
+    "silu": lambda x: x / (1.0 + jnp.exp(-x)),
+}
+
+
+def get_activation(name: str) -> Activation:
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(f"unknown activation {name!r}; have {sorted(_REGISTRY)}") from e
+
+
+def register_activation(name: str, fn: Activation) -> None:
+    _REGISTRY[name] = fn

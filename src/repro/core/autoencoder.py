@@ -1,0 +1,107 @@
+"""OS-ELM autoencoder for semi-supervised anomaly detection (paper §3.4).
+
+Autoencoder specialization: n == m (input reconstructs itself), Ñ < n
+(bottleneck). Training uses x as its own target; the reconstruction MSE
+is the anomaly score. Incoming data with loss above ``reject_threshold``
+is rejected before training ("incoming data with high loss value should
+be automatically rejected before training for stable anomaly
+detection", §3.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.elm import SLFNParams, init_slfn
+from repro.core.oselm import (
+    OSELMState,
+    init_oselm,
+    oselm_loss,
+    oselm_step_k1,
+    oselm_train_sequential,
+)
+
+
+def init_autoencoder(
+    key: jax.Array,
+    n_features: int,
+    n_hidden: int,
+    x0: jnp.ndarray,
+    *,
+    activation: str = "sigmoid",
+    ridge: float = 0.0,
+    forget: float = 1.0,
+) -> OSELMState:
+    """Build the SLFN (Ñ < n enforced) and run the Eq. 13 init step with
+    x0 as both input and target."""
+    if n_hidden >= n_features:
+        raise ValueError(f"autoencoder needs a bottleneck: Ñ={n_hidden} >= n={n_features}")
+    params = init_slfn(key, n_features, n_hidden)
+    return init_oselm(params, x0, x0, activation=activation, ridge=ridge, forget=forget)
+
+
+def ae_score(state: OSELMState, x: jnp.ndarray) -> jnp.ndarray:
+    """Anomaly score = reconstruction MSE per sample; high = anomalous."""
+    return oselm_loss(state, x, x)
+
+
+def ae_train_step(state: OSELMState, x: jnp.ndarray) -> OSELMState:
+    """One k=1 sequential autoencoder update (t = x)."""
+    return oselm_step_k1(state, x, x)
+
+
+def ae_train_stream(state: OSELMState, xs: jnp.ndarray) -> OSELMState:
+    """Scan the k=1 update across a stream of samples."""
+    return oselm_train_sequential(state, xs, xs)
+
+
+def ae_train_step_guarded(
+    state: OSELMState, x: jnp.ndarray, reject_threshold: jnp.ndarray
+) -> tuple[OSELMState, jnp.ndarray]:
+    """Train only if the sample is not anomalous under the current model
+    (§3.4 rejection rule). Returns (state, accepted?)."""
+    score = ae_score(state, x[None, :])[0]
+    accept = score <= reject_threshold
+    new_state = oselm_step_k1(state, x, x)
+    merged = jax.tree.map(
+        lambda a, b: jnp.where(accept, a, b), new_state, state
+    )
+    return merged, accept
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DetectorBank:
+    """Multiple on-device learning instances, one per normal pattern
+    (ref [18]); states are stacked along a leading axis and driven with
+    vmap. The bank's anomaly score is the min over instances."""
+
+    states: OSELMState  # stacked: every leaf has leading axis n_instances
+
+    @property
+    def n_instances(self) -> int:
+        return self.states.beta.shape[0]
+
+
+def make_bank(states: list[OSELMState]) -> DetectorBank:
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    return DetectorBank(states=stacked)
+
+
+def bank_score(bank: DetectorBank, x: jnp.ndarray) -> jnp.ndarray:
+    """min over instances of the reconstruction loss: a sample is normal
+    if *any* specialized instance reconstructs it."""
+    per_inst = jax.vmap(lambda s: ae_score(s, x))(bank.states)  # (I, k)
+    return jnp.min(per_inst, axis=0)
+
+
+def bank_train_instance(bank: DetectorBank, idx: int, x: jnp.ndarray) -> DetectorBank:
+    """Sequentially train one instance of the bank on a sample."""
+    inst = jax.tree.map(lambda leaf: leaf[idx], bank.states)
+    inst = ae_train_step(inst, x)
+    new_states = jax.tree.map(
+        lambda leaf, new: leaf.at[idx].set(new), bank.states, inst
+    )
+    return DetectorBank(states=new_states)

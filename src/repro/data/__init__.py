@@ -1,0 +1,28 @@
+"""repro.data — dataset substrate.
+
+Synthetic analogues of the paper's three datasets (the real UAH-DriveSet
+/ Smartphone-HAR / MNIST are not available offline — see DESIGN.md §2),
+plus the streaming shard pipeline used to feed non-IID pattern streams
+to federated edge devices / mesh shards.
+"""
+from repro.data.synthetic import (
+    DATASETS,
+    AnomalyDataset,
+    make_dataset,
+    make_driving_dataset,
+    make_har_dataset,
+    make_mnist_like_dataset,
+)
+from repro.data.pipeline import ShardedStream, make_pattern_stream, train_test_split
+
+__all__ = [
+    "DATASETS",
+    "AnomalyDataset",
+    "make_dataset",
+    "make_driving_dataset",
+    "make_har_dataset",
+    "make_mnist_like_dataset",
+    "ShardedStream",
+    "make_pattern_stream",
+    "train_test_split",
+]

@@ -1,0 +1,21 @@
+from repro.federated.protocol import (
+    CommLog,
+    EdgeDevice,
+    FederationServer,
+    Payload,
+)
+from repro.federated.selection import (
+    all_clients,
+    loss_threshold_selection,
+    resource_constrained_selection,
+)
+from repro.federated.mesh_federation import (
+    mesh_cooperative_update,
+    mesh_federated_train,
+)
+
+__all__ = [
+    "CommLog", "EdgeDevice", "FederationServer", "Payload",
+    "all_clients", "loss_threshold_selection", "resource_constrained_selection",
+    "mesh_cooperative_update", "mesh_federated_train",
+]

@@ -1,0 +1,137 @@
+"""The paper's cooperative model update as a mesh collective.
+
+DESIGN.md §1: E²LM's merge (Eq. 8) is a sum of per-device sufficient
+statistics, so on a TPU mesh the federation of N edge devices maps to N
+data-parallel shards whose (U, V) are combined with **one
+``jax.lax.psum``** over the federation axes — the paper's one-shot
+cooperative update, executed as a single all-reduce over ICI instead of
+uploads to a parameter server.
+
+Each mesh shard:
+  1. sequentially trains its own OS-ELM autoencoder on its local
+     (non-IID) stream — `oselm_step_k1` scanned over the stream,
+  2. computes (U, V) by Eq. 15 — only when a merge is requested,
+  3. psums U and V over ("data",) or ("pod", "data"),
+  4. recovers P ← U⁻¹, β ← U⁻¹V locally (every shard ends up with the
+     identical merged model, like the paper's Device-A/B symmetry).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax >= 0.6
+    from jax import shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+from repro.core import UV, OSELMState, from_uv, oselm_step_k1, to_uv
+
+
+def _stack_spec(axes: Sequence[str]) -> P:
+    """Shard the leading (device) axis of every stacked leaf over the
+    federation mesh axes."""
+    return P(tuple(axes))
+
+
+def mesh_cooperative_update(
+    states: OSELMState,
+    mesh: Mesh,
+    axes: Sequence[str] = ("data",),
+    *,
+    ridge: float = 0.0,
+) -> OSELMState:
+    """One-shot federated merge of per-shard OS-ELM states.
+
+    ``states`` is a stacked OSELMState whose leaves carry a leading
+    shard axis of size prod(mesh.shape[a] for a in axes). Returns the
+    merged state broadcast back to every shard (identical values).
+    """
+    spec = _stack_spec(axes)
+
+    def body(st: OSELMState) -> OSELMState:
+        local = jax.tree.map(lambda l: l[0], st)          # this shard's state
+        uv = to_uv(local, ridge=ridge)
+        u = jax.lax.psum(uv.u, tuple(axes))               # Eq. 8 as all-reduce
+        v = jax.lax.psum(uv.v, tuple(axes))
+        merged = from_uv(local, UV(u=u, v=v), ridge=ridge)
+        return jax.tree.map(lambda l: l[None], merged)
+
+    fn = _shard_map(body, mesh, in_specs=spec, out_specs=spec)
+    return jax.jit(fn)(states)
+
+
+def mesh_federated_train(
+    states: OSELMState,
+    streams: jnp.ndarray,
+    mesh: Mesh,
+    axes: Sequence[str] = ("data",),
+    *,
+    merge_every: int | None = None,
+    ridge: float = 0.0,
+) -> OSELMState:
+    """Train every shard on its local stream, then cooperatively merge.
+
+    ``streams``: (n_shards, steps, features) — shard-axis sharded over
+    ``axes``. If ``merge_every`` is given, the stream is chunked and a
+    cooperative update runs after every chunk (the paper's "repeatedly
+    applied to synchronize" mode); otherwise a single one-shot merge
+    runs at the end.
+    """
+    spec = _stack_spec(axes)
+
+    def local_train(st: OSELMState, xs: jnp.ndarray) -> OSELMState:
+        def step(s, x):
+            return oselm_step_k1(s, x, x), None
+
+        out, _ = jax.lax.scan(step, st, xs)
+        return out
+
+    def body(st: OSELMState, xs: jnp.ndarray) -> OSELMState:
+        local = jax.tree.map(lambda l: l[0], st)
+        stream = xs[0]  # (steps, features)
+
+        def merge(s: OSELMState) -> OSELMState:
+            uv = to_uv(s, ridge=ridge)
+            u = jax.lax.psum(uv.u, tuple(axes))
+            v = jax.lax.psum(uv.v, tuple(axes))
+            return from_uv(s, UV(u=u, v=v), ridge=ridge)
+
+        if merge_every is None:
+            local = local_train(local, stream)
+            local = merge(local)
+        else:
+            steps = stream.shape[0]
+            n_chunks = steps // merge_every
+            chunks = stream[: n_chunks * merge_every].reshape(
+                n_chunks, merge_every, -1
+            )
+
+            def chunk_step(s, chunk):
+                s2 = merge(local_train(s, chunk))
+                # psum outputs are device-invariant; the scan carry entered
+                # as device-varying — restore the varying type (pvary is
+                # psum's dual under shard_map's manual-axes typing)
+                def _revary(n, o):
+                    n = jnp.asarray(n, o.dtype)
+                    missing = tuple(a for a in axes if a not in jax.typeof(n).vma)
+                    return jax.lax.pvary(n, missing) if missing else n
+
+                s2 = jax.tree.map(_revary, s2, s)
+                return s2, None
+
+            local, _ = jax.lax.scan(chunk_step, local, chunks)
+        return jax.tree.map(lambda l: l[None], local)
+
+    fn = _shard_map(body, mesh, in_specs=(spec, spec), out_specs=spec)
+    return jax.jit(fn)(states, streams)

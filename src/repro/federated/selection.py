@@ -1,0 +1,42 @@
+"""Client-selection strategy hooks (paper §4.2 last paragraph).
+
+The paper merges a predefined device set but cites two selection lines
+of work: resource-constrained selection (Nishio & Yonetani, ref [19])
+and accuracy-driven selection excluding unsatisfying local models
+(Qin et al., ref [20]). We provide both as pluggable strategies for
+``cooperative_round(select=...)``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping, Sequence
+
+SelectFn = Callable[[Sequence[str]], Sequence[str]]
+
+
+def all_clients(ids: Sequence[str]) -> Sequence[str]:
+    """Paper default: the predefined device set merges wholesale."""
+    return ids
+
+
+def resource_constrained_selection(
+    budgets: Mapping[str, float], threshold: float
+) -> SelectFn:
+    """Ref [19]-style: only clients whose (estimated) round time fits the
+    deadline participate."""
+
+    def select(ids: Sequence[str]) -> Sequence[str]:
+        return [i for i in ids if budgets.get(i, float("inf")) <= threshold]
+
+    return select
+
+
+def loss_threshold_selection(
+    local_losses: Mapping[str, float], max_loss: float
+) -> SelectFn:
+    """Ref [20]-style: exclude unsatisfying local models (high validation
+    loss) from the aggregation."""
+
+    def select(ids: Sequence[str]) -> Sequence[str]:
+        return [i for i in ids if local_losses.get(i, float("inf")) <= max_loss]
+
+    return select

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Layout per kernel: ``<name>.py`` holds the pallas_call + BlockSpec,
+``ops.py`` the jit'd wrappers, ``ref.py`` the pure-jnp oracles the
+tests assert against (interpret=True on CPU; Mosaic on TPU).
+"""
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.gla_scan import gla_forward
+from repro.kernels.ops import (
+    hidden_proj,
+    matmul_atb,
+    oselm_step_k1_kernel,
+    rank1_add,
+    uv_accum,
+    uv_from_state_kernel,
+)
+
+__all__ = [
+    "flash_attention",
+    "gla_forward",
+    "hidden_proj",
+    "matmul_atb",
+    "oselm_step_k1_kernel",
+    "rank1_add",
+    "uv_accum",
+    "uv_from_state_kernel",
+]

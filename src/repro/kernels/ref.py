@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against
+these references (kernels run in interpret mode on CPU; on a real TPU
+the same pallas_call lowers to Mosaic).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.activations import get_activation
+
+
+def hidden_proj_ref(x: jnp.ndarray, alpha: jnp.ndarray, bias: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """H = G(x·α + b); accumulation in f32."""
+    g = get_activation(activation)
+    h = jnp.dot(x.astype(jnp.float32), alpha.astype(jnp.float32)) + bias.astype(jnp.float32)
+    return g(h)
+
+
+def atb_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """AᵀB with f32 accumulation — U = HᵀH, V = Hᵀt building block."""
+    return jnp.dot(a.astype(jnp.float32).T, b.astype(jnp.float32))
+
+
+def rank1_add_ref(x: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray, scale) -> jnp.ndarray:
+    """O = X + scale · u vᵀ."""
+    return x.astype(jnp.float32) + scale * jnp.outer(u.astype(jnp.float32), v.astype(jnp.float32))
+
+
+def oselm_step_k1_ref(
+    p: jnp.ndarray, beta: jnp.ndarray, h: jnp.ndarray, t: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The fused k=1 OS-ELM update this kernel package implements:
+
+        ph    = P h            (P symmetric)
+        denom = 1 + hᵀ P h
+        P'    = P − (ph)(ph)ᵀ / denom
+        β'    = β + (ph)(t − hᵀβ)ᵀ / denom     [since P'h = ph/denom]
+    """
+    p = p.astype(jnp.float32)
+    h = h.astype(jnp.float32)
+    beta = beta.astype(jnp.float32)
+    t = t.astype(jnp.float32)
+    ph = p @ h
+    denom = 1.0 + h @ ph
+    p_new = p - jnp.outer(ph, ph) / denom
+    err = t - h @ beta
+    beta_new = beta + jnp.outer(ph, err) / denom
+    return p_new, beta_new

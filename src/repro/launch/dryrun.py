@@ -1,0 +1,303 @@
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture × input shape) combination on the
+production meshes — (16,16) single-pod and (2,16,16) multi-pod — using
+ShapeDtypeStruct stand-ins (no allocation), printing memory_analysis()
+and cost_analysis() and dumping per-combo JSON roofline artifacts to
+``artifacts/dryrun/``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices so
+# jax.make_mesh can build the production mesh. jax locks the device
+# count on first init, so these MUST be the first two lines — before any
+# other import, including `from repro...`.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "").replace(
+        "--xla_force_host_platform_device_count=512", ""
+    )
+).strip()
+
+import argparse
+import dataclasses
+import gzip
+import json
+import math
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.configs.granite_3_2b import SWA_VARIANT as GRANITE_SWA
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.launch.sharding import (
+    batch_specs,
+    cache_specs_sharding,
+    opt_state_specs,
+    param_specs,
+)
+from repro.launch.steps import (
+    make_decode_step,
+    make_optimizer,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models import init_params, input_specs
+from repro.models.config import INPUT_SHAPES, ArchConfig, ShapeConfig
+from repro.models.partitioning import use_mesh
+from repro.roofline import roofline_from_compiled
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig, n_params: int, n_active: int) -> float:
+    """MODEL_FLOPS = 6·N·D (training) / 2·N·D (inference) with N = active
+    params; D = processed tokens."""
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch * 1  # decode: one token
+
+
+def _effective_cfg(arch: str, shape_name: str) -> ArchConfig:
+    cfg = GRANITE_SWA if (arch == "granite-3-2b" and shape_name == "long_500k") else get_config(arch)
+    return cfg
+
+
+def combo_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_decode():
+        return False, "full-attention arch; no sub-quadratic variant (DESIGN.md §5)"
+    return True, ""
+
+
+def lower_combo(arch: str, shape_name: str, mesh, *, verbose: bool = True):
+    """Build, lower and compile one (arch × shape × mesh) program.
+
+    Returns (compiled, meta) — meta carries model-FLOPs bookkeeping.
+    """
+    cfg = _effective_cfg(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    dp = data_axes(mesh)
+
+    params_struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    p_specs = param_specs(params_struct, mesh)
+    n_params = sum(math.prod(x.shape) for x in jax.tree.leaves(params_struct))
+    from repro.models.model import active_param_count as _apc  # shape-safe
+    # active params from struct: reuse counting on shapes
+    if cfg.n_experts:
+        expert = 0
+        for kind in ("moe", "arctic"):
+            st = params_struct["layers"].get(kind)
+            if st is not None and "moe" in st:
+                for nm in ("w_gate", "w_up", "w_down"):
+                    expert += math.prod(st["moe"][nm].shape)
+        n_active = int(n_params - expert * (1 - cfg.experts_per_token / cfg.n_experts))
+    else:
+        n_active = n_params
+
+    specs_in = input_specs(cfg, shape)
+
+    def ns(tree):  # PartitionSpec tree -> NamedSharding tree (jit API needs it)
+        return jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp),
+            tree,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        o_specs = opt_state_specs(opt_struct, p_specs)
+        step = make_train_step(cfg, opt)
+        b_specs = batch_specs("train", dp, mesh, cfg)
+        batch_struct = {k: specs_in[k] for k in b_specs}
+        fn = jax.jit(
+            step,
+            in_shardings=(ns(p_specs), ns(o_specs), ns(b_specs)),
+            out_shardings=(ns(p_specs), ns(o_specs), None),
+        )
+        with use_mesh(mesh, dp):
+            lowered = fn.lower(params_struct, opt_struct, batch_struct)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        b_specs = batch_specs("prefill", dp, mesh, cfg)
+        batch_struct = {k: specs_in[k] for k in b_specs}
+        fn = jax.jit(step, in_shardings=(ns(p_specs), ns(b_specs)), out_shardings=None)
+        with use_mesh(mesh, dp):
+            lowered = fn.lower(params_struct, batch_struct)
+    else:  # decode
+        step = make_decode_step(cfg, max_seq=shape.seq_len)
+        cache_struct = specs_in["caches"]
+        shard_seq = shape.name == "long_500k"  # batch=1 → context parallelism
+        c_specs = cache_specs_sharding(cache_struct, mesh, dp, shard_seq=shard_seq)
+        tok_spec = P(dp) if shape.global_batch % _dp_size(mesh, dp) == 0 else P()
+        args = [params_struct, specs_in["token"], cache_struct, specs_in["pos"]]
+        shard = [p_specs, tok_spec, c_specs, P()]
+        if cfg.frontend is not None:
+            args.append(specs_in["enc_out"])
+            shard.append(P(dp, None, None) if shape.global_batch % _dp_size(mesh, dp) == 0 else P())
+        fn = jax.jit(step, in_shardings=tuple(ns(sh) for sh in shard), out_shardings=None)
+        with use_mesh(mesh, dp):
+            lowered = fn.lower(*args)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    dt = time.time() - t0
+    if verbose:
+        print(f"  compiled in {dt:.1f}s")
+        print("  memory_analysis:", compiled.memory_analysis())
+    meta = {
+        "n_params": n_params,
+        "n_active": n_active,
+        "model_flops": model_flops(cfg, shape, n_params, n_active),
+        "compile_s": dt,
+    }
+    return compiled, meta
+
+
+def _dp_size(mesh, dp_axes) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in dp_axes:
+        n *= sizes[a]
+    return n
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,
+              tag: str = "") -> dict | None:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = _effective_cfg(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = combo_supported(cfg, shape)
+    label = f"{arch} × {shape_name} × {mesh_name}"
+    suffix = f"-{tag}" if tag else ""
+    if not ok:
+        print(f"SKIP {label}: {why}")
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}--{shape_name}--{mesh_name}{suffix}.json").write_text(
+            json.dumps(rec, indent=1)
+        )
+        return rec
+    print(f"LOWER {label}")
+    try:
+        compiled, meta = lower_combo(arch, shape_name, mesh)
+    except Exception as e:
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "failed", "error": f"{type(e).__name__}: {e}"}
+    chips = int(jnp.prod(jnp.asarray(mesh.devices.shape)))
+    report = roofline_from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        chips=chips, model_flops=meta["model_flops"],
+    )
+    rec = {"status": "ok", **report.to_dict(), **meta}
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    rec["cost_analysis"] = {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"-{tag}" if tag else ""
+    stem = f"{arch}--{shape_name}--{mesh_name}{suffix}"
+    out = out_dir / f"{stem}.json"
+    # persist the optimized HLO so roofline metrics can be re-derived
+    # offline without recompiling (gzip: ~10x smaller)
+    with gzip.open(out_dir / f"{stem}.hlo.gz", "wt") as f:
+        f.write(compiled.as_text())
+    out.write_text(json.dumps(rec, indent=1))
+    print(
+        f"  FLOPs={report.hlo_flops:.3e} bytes={report.hlo_bytes:.3e} "
+        f"coll={report.coll_bytes:.3e} dominant={report.dominant} "
+        f"useful={report.useful_flops_ratio:.2f}"
+    )
+    return rec
+
+
+def reanalyze(out_dir: Path = ARTIFACTS) -> None:
+    """Re-derive roofline metrics from saved HLO (no recompilation)."""
+    from repro.roofline.analysis import HW_V5E, RooflineReport
+    from repro.roofline.hlo_costs import analyze_hlo
+
+    for jf in sorted(out_dir.glob("*.json")):
+        rec = json.loads(jf.read_text())
+        if rec.get("status") != "ok":
+            continue
+        hf = jf.with_suffix("").with_suffix("")  # strip .json
+        hf = jf.parent / (jf.stem + ".hlo.gz")
+        if not hf.exists():
+            continue
+        with gzip.open(hf, "rt") as f:
+            walk = analyze_hlo(f.read())
+        chips = rec["chips"]
+        report = RooflineReport(
+            arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+            hlo_flops=walk["flops"] * chips, hlo_bytes=walk["bytes"] * chips,
+            attn_interior_bytes=walk.get("bytes_attn_interior", 0.0) * chips,
+            coll_bytes=walk["collective_bytes"] * chips,
+            coll_breakdown={k: v * chips for k, v in walk["collectives"].items()},
+            model_flops=rec["model_flops"],
+            per_device_memory=rec.get("per_device_memory", {}),
+        )
+        rec.update(report.to_dict())
+        jf.write_text(json.dumps(rec, indent=1))
+        print(f"reanalyzed {jf.name}: dominant={report.dominant} "
+              f"useful={report.useful_flops_ratio:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    if args.reanalyze:
+        reanalyze()
+        return
+
+    combos: list[tuple[str, str]] = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in sorted(INPUT_SHAPES):
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    results = []
+    for multi_pod in meshes:
+        for arch, shape in combos:
+            mesh_name = "2x16x16" if multi_pod else "16x16"
+            out = ARTIFACTS / f"{arch}--{shape}--{mesh_name}{('-' + args.tag) if args.tag else ''}.json"
+            if args.skip_existing and out.exists():
+                print(f"EXISTS {arch} × {shape} × {mesh_name}")
+                continue
+            results.append(run_combo(arch, shape, multi_pod=multi_pod, tag=args.tag))
+    failed = [r for r in results if r and r.get("status") == "failed"]
+    print(f"\n{len([r for r in results if r and r['status'] == 'ok'])} ok, "
+          f"{len(failed)} failed, "
+          f"{len([r for r in results if r and r['status'] == 'skipped'])} skipped")
+    if failed:
+        for f in failed:
+            print("FAILED:", f["arch"], f["shape"], f["mesh"], f["error"][:200])
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,149 @@
+"""Jittable train / serve / detector step factories.
+
+train_step: grad-accumulation over ``cfg.num_microbatches`` (lax.scan),
+global-norm clipping, Adam (moment dtype per config). Returns the
+detector feature tap alongside metrics so the paper's OS-ELM monitor
+can consume it.
+
+detector_step: the paper's technique as a first-class mesh program —
+every (pod, data) shard batch-updates its OS-ELM autoencoder on its
+local feature stream and the one-shot cooperative update (Eq. 8/15)
+runs as a single psum. This is the program whose roofline represents
+the paper itself (EXPERIMENTS.md §Perf pair 3).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import UV, OSELMState, from_uv, oselm_step, to_uv
+from repro.models import decode_step, lm_loss, prefill
+from repro.models.config import ArchConfig
+from repro.optim import Optimizer, adam, clip_by_global_norm
+
+try:
+    from jax import shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+PyTree = Any
+
+
+def make_optimizer(cfg: ArchConfig, lr: float = 3e-4) -> Optimizer:
+    moment_dtype = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else None
+    return adam(lr, moment_dtype=moment_dtype)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer) -> Callable:
+    M = max(1, cfg.num_microbatches)
+
+    def loss_fn(params, tokens, labels, frontend):
+        return lm_loss(params, cfg, tokens, labels, frontend=frontend)
+
+    def train_step(params, opt_state, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        frontend = batch.get("frontend")
+        b = tokens.shape[0]
+
+        if M == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, tokens, labels, frontend
+            )
+            features = metrics["features"]
+        else:
+            mb = b // M
+
+            def resh(x):
+                return None if x is None else x.reshape(M, mb, *x.shape[1:])
+
+            mbs = {"tokens": resh(tokens), "labels": resh(labels)}
+            fr = resh(frontend)
+
+            def mb_step(carry, inp):
+                gacc, lacc = carry
+                if fr is None:
+                    t, l = inp
+                    f = None
+                else:
+                    t, l, f = inp
+                (loss_i, met_i), g_i = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, t, l, f
+                )
+                gacc = jax.tree.map(lambda a, gg: a + gg.astype(a.dtype), gacc, g_i)
+                return (gacc, lacc + loss_i), met_i["features"]
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            xs = (mbs["tokens"], mbs["labels"]) + ((fr,) if fr is not None else ())
+            (gsum, lsum), feats = jax.lax.scan(mb_step, (g0, jnp.zeros((), jnp.float32)), xs)
+            grads = jax.tree.map(lambda g: g / M, gsum)
+            loss = lsum / M
+            features = feats.reshape(b, -1)
+            metrics = {"ce": loss}
+
+        grads = clip_by_global_norm(grads, 1.0)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        out_metrics = {
+            "loss": loss,
+            "features": features,
+            "grad_norm": jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+            ),
+        }
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches, features = prefill(
+            params, cfg, batch["tokens"], frontend=batch.get("frontend")
+        )
+        return {"logits": logits, "caches": caches, "features": features}
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, max_seq: int) -> Callable:
+    def serve_step(params, token, caches, pos, enc_out=None):
+        logits, new_caches = decode_step(
+            params, cfg, token, caches, pos, enc_out=enc_out, max_seq=max_seq
+        )
+        return logits, new_caches
+
+    return serve_step
+
+
+# ------------------------------------------------- the paper's program
+
+
+def make_detector_step(
+    mesh, axes: tuple[str, ...], *, merge: bool = True, ridge: float = 1e-3
+) -> Callable:
+    """OS-ELM detector update + one-shot cooperative merge on the mesh.
+
+    states: stacked OSELMState (leading shard axis), features:
+    (shards, k, D) per-shard feature chunks from the train/serve taps.
+    One psum pair = the paper's entire communication round.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(axes)
+
+    def body(st: OSELMState, feats: jnp.ndarray) -> OSELMState:
+        local = jax.tree.map(lambda l: l[0], st)
+        x = feats[0]                                  # (k, D) local chunk
+        local = oselm_step(local, x, x)               # Eq. 12, batch k
+        if merge:
+            uv = to_uv(local, ridge=ridge)
+            u = jax.lax.psum(uv.u, axes)              # Eq. 8 as all-reduce
+            v = jax.lax.psum(uv.v, axes)
+            local = from_uv(local, UV(u=u, v=v), ridge=ridge)
+        return jax.tree.map(lambda l: l[None], local)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(spec, spec), out_specs=spec)
+    return jax.jit(fn)

@@ -1,0 +1,20 @@
+from repro.models.config import INPUT_SHAPES, ArchConfig, ShapeConfig
+from repro.models.model import (
+    active_param_count,
+    cache_shape_structs,
+    decode_step,
+    encoder_forward,
+    forward,
+    init_params,
+    input_specs,
+    lm_loss,
+    param_count,
+    prefill,
+)
+
+__all__ = [
+    "INPUT_SHAPES", "ArchConfig", "ShapeConfig",
+    "active_param_count", "cache_shape_structs", "decode_step",
+    "encoder_forward", "forward", "init_params", "input_specs",
+    "lm_loss", "param_count", "prefill",
+]

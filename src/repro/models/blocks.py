@@ -1,0 +1,478 @@
+"""Transformer blocks for every kind in ``ArchConfig.layer_pattern()``.
+
+Each kind defines three things, all operating on ONE layer's params
+(the model stacks layers per kind and drives these with ``lax.scan``):
+
+  init_<kind>(key, cfg)                      -> params pytree
+  fwd(kind, p, x, ctx)                       -> (x, aux[3])
+  decode(kind, p, x_tok, cache, ctx)         -> (x_tok, new_cache)
+
+aux is a fixed-size f32[3] = (load_balance, z_loss, dropped_frac) so
+heterogeneous blocks stack in one scan (zeros for non-MoE kinds).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (
+    apply_rope,
+    blockwise_attention,
+    cross_attention_blockwise,
+    decode_attention,
+    gelu_mlp,
+    local_attention,
+    rmsnorm,
+    swiglu,
+)
+
+
+def _ffn_apply(cfg: ArchConfig, p_ffn: dict, h):
+    if cfg.ffn_type == "gelu_mlp":
+        return gelu_mlp(h, p_ffn["up"], p_ffn["down"])
+    return swiglu(h, p_ffn["gate"], p_ffn["up"], p_ffn["down"])
+from repro.models.moe import moe_ffn
+from repro.models.ssm import (
+    mamba_decode_step,
+    mamba_mix,
+    mlstm_decode_step,
+    mlstm_mix,
+    slstm_decode_step,
+    slstm_mix,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCtx:
+    """Loop-invariant context threaded through the layer scans."""
+
+    cfg: ArchConfig
+    rope_cos: jnp.ndarray | None = None    # (S, hd/2)
+    rope_sin: jnp.ndarray | None = None
+    enc_out: jnp.ndarray | None = None     # (B, T_enc, D) for dec/xattn kinds
+    causal: bool = True
+    pos: jnp.ndarray | None = None         # decode: current position scalar
+    attn_chunk: int = 512
+    collect_cache: bool = False            # prefill: emit decode caches
+    cache_len: int = 0                     # prefill: decode-cache capacity (≥ S)
+
+
+ZERO_AUX = jnp.zeros(3, jnp.float32)
+
+
+# ------------------------------------------------------------------ init
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_attn(key, cfg: ArchConfig, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(k1, (d, h * hd), dtype),
+        "wk": _dense_init(k2, (d, kv * hd), dtype),
+        "wv": _dense_init(k3, (d, kv * hd), dtype),
+        "wo": _dense_init(k4, (h * hd, d), dtype),
+    }
+
+
+def init_ffn(key, cfg: ArchConfig, dtype, d_ff=None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.ffn_type == "gelu_mlp":  # GPT-BigCode style: up/gelu/down
+        return {
+            "up": _dense_init(k2, (d, f), dtype),
+            "down": _dense_init(k3, (f, d), dtype),
+        }
+    return {
+        "gate": _dense_init(k1, (d, f), dtype),
+        "up": _dense_init(k2, (d, f), dtype),
+        "down": _dense_init(k3, (f, d), dtype),
+    }
+
+
+def init_moe(key, cfg: ArchConfig, dtype) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": _dense_init(k1, (d, e), jnp.float32),
+        "w_gate": _dense_init(k2, (e, d, f), dtype),
+        "w_up": _dense_init(k3, (e, d, f), dtype),
+        "w_down": _dense_init(k4, (e, f, d), dtype),
+    }
+
+
+def init_mamba(key, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    h, n = cfg.n_heads, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": _dense_init(ks[0], (d, 2 * di), dtype),
+        "dt_proj": _dense_init(ks[1], (di, h), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "b_proj": _dense_init(ks[2], (di, h * n), dtype),
+        "c_proj": _dense_init(ks[3], (di, h * n), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((di,), dtype),
+        "out_proj": _dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": _dense_init(ks[0], (d, d), dtype),
+        "wk": _dense_init(ks[1], (d, d), dtype),
+        "wv": _dense_init(ks[2], (d, d), dtype),
+        "wf": _dense_init(ks[3], (d, h), dtype),
+        "bf": jnp.full((h,), 3.0, dtype),     # open forget gates at init
+        "wi": _dense_init(ks[4], (d, h), dtype),
+        "bi": jnp.zeros((h,), dtype),
+        "wo_gate": _dense_init(ks[5], (d, h), dtype),
+        "bo": jnp.zeros((h,), dtype),
+        "out_proj": _dense_init(ks[6], (d, d), dtype),
+    }
+
+
+def init_slstm(key, cfg: ArchConfig, dtype) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": _dense_init(ks[0], (d, 4 * d), dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,), dtype), jnp.full((d,), 3.0, dtype), jnp.zeros((2 * d,), dtype)]
+        ),
+        "r_gates": (_dense_init(ks[1], (h * dh, 4 * dh), dtype)).reshape(h, dh, 4 * dh),
+        "out_proj": _dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def init_block(key, kind: str, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    ln = lambda: jnp.zeros((d,), jnp.float32)
+    if kind in ("dense", "swa", "enc"):
+        return {"ln1": ln(), "attn": init_attn(ks[0], cfg, dtype), "ln2": ln(),
+                "ffn": init_ffn(ks[1], cfg, dtype)}
+    if kind == "moe":
+        return {"ln1": ln(), "attn": init_attn(ks[0], cfg, dtype), "ln2": ln(),
+                "moe": init_moe(ks[1], cfg, dtype)}
+    if kind == "arctic":
+        return {"ln1": ln(), "attn": init_attn(ks[0], cfg, dtype), "ln2": ln(),
+                "ffn": init_ffn(ks[1], cfg, dtype), "moe": init_moe(ks[2], cfg, dtype)}
+    if kind in ("hymba", "hymba_swa"):
+        return {"ln1": ln(), "attn": init_attn(ks[0], cfg, dtype),
+                "mamba": init_mamba(ks[1], cfg, dtype), "ln2": ln(),
+                "ffn": init_ffn(ks[2], cfg, dtype)}
+    if kind == "mlstm":
+        return {"ln1": ln(), "mlstm": init_mlstm(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln1": ln(), "slstm": init_slstm(ks[0], cfg, dtype)}
+    if kind == "dec":
+        return {"ln1": ln(), "attn": init_attn(ks[0], cfg, dtype),
+                "ln_x": ln(), "xattn": init_attn(ks[1], cfg, dtype), "ln2": ln(),
+                "ffn": init_ffn(ks[2], cfg, dtype)}
+    if kind == "xattn":
+        return {"ln_x": ln(), "xattn": init_attn(ks[0], cfg, dtype),
+                "gate": jnp.zeros((), jnp.float32), "ln2": ln(),
+                "ffn": init_ffn(ks[1], cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# --------------------------------------------------------------- forward
+
+
+def _qkv(p, x, cfg: ArchConfig, ctx: BlockCtx, *, rope: bool = True):
+    """Returns (q, k, v) GQA-expanded plus the pre-repeat (k, v) for the
+    decode cache."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if rope and ctx.rope_cos is not None:
+        q = apply_rope(q, ctx.rope_cos[:s], ctx.rope_sin[:s])
+        k = apply_rope(k, ctx.rope_cos[:s], ctx.rope_sin[:s])
+    k_c, v_c = k, v
+    if h != kv:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    return q, k, v, k_c, v_c
+
+
+def _rolled_cache(k_c: jnp.ndarray, cache_len: int) -> jnp.ndarray:
+    """Place the last ``min(cache_len, S)`` entries at their rolling slots
+    (slot = abs_pos %% cache_len) so decode can continue seamlessly.
+    ``cache_len`` may exceed S (pre-allocated decode capacity)."""
+    b, s, kv, hd = k_c.shape
+    n_keep = min(cache_len, s)
+    tail = k_c[:, s - n_keep:]
+    slots = (jnp.arange(s - n_keep, s)) % cache_len
+    out = jnp.zeros((b, cache_len, kv, hd), k_c.dtype)
+    return out.at[:, slots].set(tail)
+
+
+def _self_attn(p, x, cfg, ctx: BlockCtx, *, window: int = 0, causal: bool = True):
+    b, s, _ = x.shape
+    q, k, v, k_c, v_c = _qkv(p, x, cfg, ctx)
+    if window and s > window:
+        o = local_attention(q, k, v, window=window)
+    else:
+        o = blockwise_attention(q, k, v, causal=causal, chunk=ctx.attn_chunk)
+    cache = None
+    if ctx.collect_cache:
+        cap = max(ctx.cache_len, s)
+        cl = min(window, cap) if window else cap
+        cdt = (jnp.float8_e4m3fn if cfg.kv_cache_dtype == "float8_e4m3fn"
+               else k_c.dtype)
+        cache = {"k": _rolled_cache(k_c.astype(cdt), cl),
+                 "v": _rolled_cache(v_c.astype(cdt), cl)}
+    return o.reshape(b, s, cfg.n_heads * cfg.head_dim) @ p["wo"], cache
+
+
+def _cross_attn(p, x, enc_out, cfg, ctx: BlockCtx):
+    b, s, _ = x.shape
+    t = enc_out.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (enc_out @ p["wk"]).reshape(b, t, kv, hd)
+    v = (enc_out @ p["wv"]).reshape(b, t, kv, hd)
+    if h != kv:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    o = cross_attention_blockwise(q, k, v, chunk=ctx.attn_chunk)
+    return o.reshape(b, s, h * hd) @ p["wo"]
+
+
+def block_fwd(kind: str, p: dict, x: jnp.ndarray, ctx: BlockCtx):
+    """Returns (x, aux[3], cache) — cache is None unless ctx.collect_cache."""
+    cfg = ctx.cfg
+    eps = cfg.norm_eps
+    aux = ZERO_AUX
+    cache = None
+
+    if kind in ("dense", "swa", "enc"):
+        window = cfg.sliding_window if kind == "swa" else 0
+        causal = kind != "enc"
+        o, cache = _self_attn(p["attn"], rmsnorm(x, p["ln1"], eps), cfg, ctx,
+                              window=window, causal=causal)
+        x = x + o
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + _ffn_apply(cfg, p["ffn"], h)
+        return x, aux, cache
+
+    if kind in ("moe", "arctic"):
+        o, cache = _self_attn(p["attn"], rmsnorm(x, p["ln1"], eps), cfg, ctx)
+        x = x + o
+        h = rmsnorm(x, p["ln2"], eps)
+        y, moe_aux = moe_ffn(
+            p["moe"], h,
+            n_experts=cfg.n_experts, top_k=cfg.experts_per_token,
+            tokens_per_group=cfg.tokens_per_group,
+            capacity_factor=cfg.capacity_factor,
+            dispatch=cfg.moe_dispatch,
+        )
+        if kind == "arctic":  # dense FFN residual in parallel with the MoE
+            y = y + _ffn_apply(cfg, p["ffn"], h)
+        x = x + y
+        aux = jnp.stack([moe_aux["lb_loss"], moe_aux["z_loss"], moe_aux["dropped_frac"]])
+        return x, aux, cache
+
+    if kind in ("hymba", "hymba_swa"):
+        h = rmsnorm(x, p["ln1"], eps)
+        window = cfg.sliding_window if kind == "hymba_swa" else 0
+        attn_out, attn_cache = _self_attn(p["attn"], h, cfg, ctx, window=window)
+        mamba_out, ssm_state = mamba_mix(
+            p["mamba"], h, n_heads=cfg.n_heads, ssm_state=cfg.ssm_state
+        )
+        x = x + 0.5 * (attn_out + mamba_out)     # parallel heads, fused mean
+        h2 = rmsnorm(x, p["ln2"], eps)
+        x = x + _ffn_apply(cfg, p["ffn"], h2)
+        if ctx.collect_cache:
+            # engine state is (B,H,dk=n,dv=dh) — matches cache_spec "ssm"
+            cache = {**attn_cache, "ssm": ssm_state}
+        return x, aux, cache
+
+    if kind == "mlstm":
+        y, mem = mlstm_mix(p["mlstm"], rmsnorm(x, p["ln1"], eps), n_heads=cfg.n_heads)
+        x = x + y
+        if ctx.collect_cache:
+            cache = {"mem": mem}
+        return x, aux, cache
+
+    if kind == "slstm":
+        y, st = slstm_mix(p["slstm"], rmsnorm(x, p["ln1"], eps), n_heads=cfg.n_heads)
+        x = x + y
+        if ctx.collect_cache:
+            cache = {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+        return x, aux, cache
+
+    if kind == "dec":
+        o, cache = _self_attn(p["attn"], rmsnorm(x, p["ln1"], eps), cfg, ctx)
+        x = x + o
+        x = x + _cross_attn(p["xattn"], rmsnorm(x, p["ln_x"], eps), ctx.enc_out, cfg, ctx)
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + _ffn_apply(cfg, p["ffn"], h)
+        return x, aux, cache
+
+    if kind == "xattn":
+        g = jnp.tanh(p["gate"])
+        o = _cross_attn(p["xattn"], rmsnorm(x, p["ln_x"], eps), ctx.enc_out, cfg, ctx)
+        x = x + (g * o).astype(x.dtype)  # f32 gate must not promote the carry
+        h = rmsnorm(x, p["ln2"], eps)
+        x = x + _ffn_apply(cfg, p["ffn"], h)
+        if ctx.collect_cache:
+            cache = {}  # xattn layers are stateless in decode
+        return x, aux, cache
+
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------- decode
+
+
+def cache_spec(kind: str, cfg: ArchConfig, batch: int, seq_len: int) -> Any:
+    """Shapes of one layer's decode cache (ShapeDtypeStruct-compatible)."""
+    kv, hd, h = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    d = cfg.d_model
+    if cfg.kv_cache_dtype == "float8_e4m3fn":
+        dt = jnp.float8_e4m3fn   # §Perf bonus: halves decode cache traffic vs bf16
+    else:
+        dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    if kind in ("dense", "moe", "arctic", "dec"):
+        return {"k": ((batch, seq_len, kv, hd), dt), "v": ((batch, seq_len, kv, hd), dt)}
+    if kind == "xattn":
+        return {}  # stateless: cross-attn k/v recomputed from enc_out
+    if kind == "swa":
+        w = min(cfg.sliding_window or seq_len, seq_len)
+        return {"k": ((batch, w, kv, hd), dt), "v": ((batch, w, kv, hd), dt)}
+    if kind in ("hymba", "hymba_swa"):
+        w = seq_len if kind == "hymba" else min(cfg.sliding_window or seq_len, seq_len)
+        di = cfg.mamba_expand * cfg.d_model
+        return {
+            "k": ((batch, w, kv, hd), dt), "v": ((batch, w, kv, hd), dt),
+            "ssm": ((batch, h, cfg.ssm_state, di // h), jnp.float32),
+        }
+    if kind == "mlstm":
+        dh = d // h
+        return {"mem": ((batch, h, dh, dh + 1), jnp.float32)}
+    if kind == "slstm":
+        return {
+            "h": ((batch, d), jnp.float32), "c": ((batch, d), jnp.float32),
+            "n": ((batch, d), jnp.float32), "m": ((batch, d), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def _decode_self_attn(p, x_tok, cache_k, cache_v, cfg, ctx: BlockCtx, *, window: int = 0):
+    """One-token attention against a (possibly rolling) cache.
+
+    Writes the token's k/v at slot pos %% cache_len, then attends over
+    min(pos+1, cache_len) valid slots — exact sliding window semantics
+    when cache_len == window.
+    """
+    b = x_tok.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = ctx.pos
+    cache_len = cache_k.shape[1]
+    q = (x_tok @ p["wq"]).reshape(b, 1, h, hd)
+    k1 = (x_tok @ p["wk"]).reshape(b, 1, kv, hd)
+    v1 = (x_tok @ p["wv"]).reshape(b, 1, kv, hd)
+    if ctx.rope_cos is not None:
+        cos = jax.lax.dynamic_slice_in_dim(ctx.rope_cos, pos, 1)
+        sin = jax.lax.dynamic_slice_in_dim(ctx.rope_sin, pos, 1)
+        q = apply_rope(q, cos, sin)
+        k1 = apply_rope(k1, cos, sin)
+    slot = pos % cache_len
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k1.astype(cache_k.dtype), slot, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v1.astype(cache_v.dtype), slot, 1)
+    n_valid = jnp.minimum(pos + 1, cache_len)
+    if cache_k.dtype == jnp.float8_e4m3fn:  # upcast at the MXU boundary
+        o = decode_attention(q, cache_k.astype(jnp.bfloat16),
+                             cache_v.astype(jnp.bfloat16), n_valid)
+    else:
+        o = decode_attention(q, cache_k, cache_v, n_valid)
+    o = o.reshape(b, h * hd) @ p["wo"]
+    return o, cache_k, cache_v
+
+
+def block_decode(kind: str, p: dict, x_tok: jnp.ndarray, cache: dict, ctx: BlockCtx):
+    """x_tok: (B, D) single-token hidden state."""
+    cfg = ctx.cfg
+    eps = cfg.norm_eps
+
+    if kind in ("dense", "swa", "moe", "arctic"):
+        h = rmsnorm(x_tok, p["ln1"], eps)
+        o, ck, cv = _decode_self_attn(p["attn"], h, cache["k"], cache["v"], cfg, ctx)
+        x_tok = x_tok + o
+        h2 = rmsnorm(x_tok, p["ln2"], eps)
+        if kind in ("moe", "arctic"):
+            y, _ = moe_ffn(
+                p["moe"], h2[:, None, :],
+                n_experts=cfg.n_experts, top_k=cfg.experts_per_token,
+                tokens_per_group=min(cfg.tokens_per_group, x_tok.shape[0]),
+                capacity_factor=cfg.capacity_factor,
+                dispatch=cfg.moe_dispatch,
+            )
+            y = y[:, 0]
+            if kind == "arctic":
+                y = y + _ffn_apply(cfg, p["ffn"], h2)
+        else:
+            y = _ffn_apply(cfg, p["ffn"], h2)
+        x_tok = x_tok + y
+        return x_tok, {**cache, "k": ck, "v": cv}
+
+    if kind in ("hymba", "hymba_swa"):
+        h = rmsnorm(x_tok, p["ln1"], eps)
+        o, ck, cv = _decode_self_attn(p["attn"], h, cache["k"], cache["v"], cfg, ctx)
+        ssm, ym = mamba_decode_step(
+            p["mamba"], cache["ssm"], h, n_heads=cfg.n_heads, ssm_state=cfg.ssm_state
+        )
+        x_tok = x_tok + (0.5 * (o + ym)).astype(x_tok.dtype)
+        h2 = rmsnorm(x_tok, p["ln2"], eps)
+        x_tok = x_tok + _ffn_apply(cfg, p["ffn"], h2)
+        return x_tok, {"k": ck, "v": cv, "ssm": ssm}
+
+    if kind == "mlstm":
+        h = rmsnorm(x_tok, p["ln1"], eps)
+        mem, y = mlstm_decode_step(p["mlstm"], cache["mem"], h, n_heads=cfg.n_heads)
+        return x_tok + y.astype(x_tok.dtype), {"mem": mem.astype(jnp.float32)}
+
+    if kind == "slstm":
+        h = rmsnorm(x_tok, p["ln1"], eps)
+        st = (cache["h"], cache["c"], cache["n"], cache["m"])
+        st, y = slstm_decode_step(p["slstm"], st, h, n_heads=cfg.n_heads)
+        return x_tok + y, {"h": st[0], "c": st[1], "n": st[2], "m": st[3]}
+
+    if kind == "dec":
+        h = rmsnorm(x_tok, p["ln1"], eps)
+        o, ck, cv = _decode_self_attn(p["attn"], h, cache["k"], cache["v"], cfg, ctx)
+        x_tok = x_tok + o
+        hx = rmsnorm(x_tok, p["ln_x"], eps)
+        x_tok = x_tok + _cross_attn(p["xattn"], hx[:, None, :], ctx.enc_out, cfg, ctx)[:, 0]
+        h2 = rmsnorm(x_tok, p["ln2"], eps)
+        x_tok = x_tok + _ffn_apply(cfg, p["ffn"], h2)
+        return x_tok, {**cache, "k": ck, "v": cv}
+
+    if kind == "xattn":
+        g = jnp.tanh(p["gate"])
+        hx = rmsnorm(x_tok, p["ln_x"], eps)
+        o = _cross_attn(p["xattn"], hx[:, None, :], ctx.enc_out, cfg, ctx)[:, 0]
+        x_tok = x_tok + (g * o).astype(x_tok.dtype)
+        h2 = rmsnorm(x_tok, p["ln2"], eps)
+        x_tok = x_tok + _ffn_apply(cfg, p["ffn"], h2)
+        return x_tok, cache
+
+    raise ValueError(kind)

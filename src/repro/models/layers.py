@@ -1,0 +1,374 @@
+"""Shared transformer layers: RMSNorm, RoPE, blockwise attention.
+
+Attention is implemented *blockwise* (flash-style online softmax,
+``lax.scan`` over KV chunks) so prefill at 32k never materializes the
+(S × S) score tensor — per-chunk scores are (bq × bk). This is the pure
+JAX path used by the multi-pod dry-run; `repro.kernels.flash_attn`
+carries the Pallas version of the same algorithm for on-TPU execution.
+
+Sliding-window attention uses the exact two-chunk formulation (each
+query chunk attends its own and the previous chunk, intra-window
+masked), so local layers really do cost O(S·2w) — the roofline sees the
+window, not a masked S².
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    pos = jnp.arange(seq_len, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, hd); cos/sin: (S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def _expand_kv(k: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """GQA: repeat kv heads to match query heads. (B,S,KV,hd)->(B,S,H,hd)."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.repeat(k, groups, axis=2)
+
+
+@partial(jax.jit, static_argnames=("causal", "chunk"))
+def blockwise_attention_fwd_only(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, H, hd)
+    v: jnp.ndarray,            # (B, Sk, H, hd)
+    *,
+    causal: bool = True,
+    chunk: int = 512,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash-style attention forward: scan over KV chunks with online
+    softmax. Never materializes more than (B, H, chunk_q, chunk_k)
+    scores — but jax.grad through the scan SAVES every chunk's scores as
+    residuals, so training uses ``blockwise_attention`` (custom VJP that
+    recomputes scores in the backward — §Perf iteration 1).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    nq = -(-sq // cq)
+    nk = -(-sk // ck)
+    # pad to chunk multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * cq - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * ck - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * ck - sk), (0, 0), (0, 0)))
+
+    qp = qp.reshape(b, nq, cq, h, hd).transpose(1, 0, 3, 2, 4)  # (nq,B,H,cq,hd)
+    kp = kp.reshape(b, nk, ck, h, hd).transpose(1, 0, 3, 2, 4)
+    vp = vp.reshape(b, nk, ck, h, hd).transpose(1, 0, 3, 2, 4)
+
+    q_pos = q_offset + jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+    k_valid = k_pos < sk
+
+    def per_qchunk(qi, q_blk):
+        qpos = q_pos[qi]                     # (cq,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, kpos, kval = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk).astype(jnp.float32) * scale
+            mask = kval[None, None, None, :]
+            if causal:
+                mask = mask & (kpos[None, None, None, :] <= qpos[None, None, :, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kp, vp, k_pos, k_valid))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda args: per_qchunk(*args), (jnp.arange(nq), qp))
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, nq * cq, h, hd)[:, :sq]
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Flash attention with a memory-O(S) backward (custom VJP).
+#
+# §Perf iteration 1 (EXPERIMENTS.md): differentiating through the
+# forward's online-softmax scan makes jax save every (cq × ck) score
+# chunk as a scan residual — ~137 GB/layer for llama3-405b @ 4k — so the
+# backward RECOMPUTES scores per chunk pair from (q, k, v, out, m, l)
+# exactly like the Dao flash-attention backward. Costs ~+25% attention
+# FLOPs in exchange for O(S) attention memory.
+# ----------------------------------------------------------------------
+
+
+def _fa_chunks(x, c):
+    b, s, h, hd = x.shape
+    n = -(-s // c)
+    xp = jnp.pad(x, ((0, 0), (0, n * c - s), (0, 0), (0, 0)))
+    return xp.reshape(b, n, c, h, hd).transpose(1, 0, 3, 2, 4), n  # (n,B,H,c,hd)
+
+
+def _fa_forward(q, k, v, causal: bool, chunk: int):
+    with jax.named_scope("flash_attention_fwd"):
+        return _fa_forward_inner(q, k, v, causal, chunk)
+
+
+def _fa_forward_inner(q, k, v, causal: bool, chunk: int):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    cq, ck = min(chunk, sq), min(chunk, sk)
+    qp, nq = _fa_chunks(q, cq)
+    kp, nk = _fa_chunks(k, ck)
+    vp, _ = _fa_chunks(v, ck)
+    q_pos = jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+    k_valid = k_pos < sk
+
+    def per_qchunk(args):
+        qi, q_blk = args
+        qpos = q_pos[qi]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, kpos, kval = inp
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk).astype(jnp.float32) * scale
+            mask = kval[None, None, None, :]
+            if causal:
+                mask = mask & (kpos[None, None, None, :] <= qpos[None, None, :, None])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, cq), jnp.float32)
+        a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kp, vp, k_pos, k_valid))
+        return acc / jnp.maximum(l, 1e-30)[..., None], m, l
+
+    out_c, m_c, l_c = jax.lax.map(per_qchunk, (jnp.arange(nq), qp))
+    out = out_c.transpose(1, 0, 3, 2, 4).reshape(b, nq * cq, h, hd)[:, :sq]
+    return out.astype(q.dtype), (m_c, l_c)  # stats stay chunked: (nq,B,H,cq)
+
+
+@partial(jax.jit, static_argnames=("causal", "chunk"))
+def _fa_backward_impl(q, k, v, out, m_c, l_c, dout, *, causal: bool, chunk: int):
+    with jax.named_scope("flash_attention_bwd"):
+        return _fa_backward_inner(q, k, v, out, m_c, l_c, dout, causal=causal, chunk=chunk)
+
+
+def _fa_backward_inner(q, k, v, out, m_c, l_c, dout, *, causal: bool, chunk: int):
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = hd ** -0.5
+    cq, ck = min(chunk, sq), min(chunk, sk)
+    qp, nq = _fa_chunks(q, cq)
+    kp, nk = _fa_chunks(k, ck)
+    vp, _ = _fa_chunks(v, ck)
+    dop, _ = _fa_chunks(dout.astype(jnp.float32), cq)
+    outp, _ = _fa_chunks(out.astype(jnp.float32), cq)
+    delta = (dop * outp).sum(-1)  # (nq,B,H,cq)
+    q_pos = jnp.arange(nq * cq).reshape(nq, cq)
+    k_pos = jnp.arange(nk * ck).reshape(nk, ck)
+    k_valid = k_pos < sk
+
+    def per_qchunk(carry, inp):
+        dk_acc, dv_acc = carry                    # (nk,B,H,ck,hd) f32
+        qi, q_blk, do_blk, m_i, l_i, delta_i = inp
+
+        def kv_step(carry2, j):
+            dq_i, dk_a, dv_a = carry2
+            k_blk = kp[j]
+            v_blk = vp[j]
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk).astype(jnp.float32) * scale
+            mask = k_valid[j][None, None, None, :]
+            if causal:
+                mask = mask & (
+                    k_pos[j][None, None, None, :] <= q_pos[qi][None, None, :, None]
+                )
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - m_i[..., None]) / jnp.maximum(l_i, 1e-30)[..., None]
+            dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, do_blk)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", do_blk, v_blk.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhqk,bhkd->bhqd", ds, k_blk.astype(jnp.float32))
+            dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, q_blk.astype(jnp.float32))
+            dk_a = dk_a.at[j].add(dk_j)
+            dv_a = dv_a.at[j].add(dv_j)
+            return (dq_i, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+        (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk)
+        )
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((nk, b, h, ck, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, b, h, ck, hd), jnp.float32)
+    (dk_c, dv_c), dq_c = jax.lax.scan(
+        per_qchunk, (dk0, dv0),
+        (jnp.arange(nq), qp, dop, m_c, l_c, delta),
+    )
+
+    def unchunk(xc, s, dtype):
+        n = xc.shape[0]
+        c = xc.shape[3]
+        return (
+            xc.transpose(1, 0, 3, 2, 4).reshape(b, n * c, h, hd)[:, :s].astype(dtype)
+        )
+
+    return unchunk(dq_c, sq, q.dtype), unchunk(dk_c, sk, k.dtype), unchunk(dv_c, sk, v.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, chunk: int):
+    @jax.custom_vjp
+    def fa(q, k, v):
+        out, _ = _fa_forward(q, k, v, causal, chunk)
+        return out
+
+    def fwd(q, k, v):
+        out, (m_c, l_c) = _fa_forward(q, k, v, causal, chunk)
+        return out, (q, k, v, out, m_c, l_c)
+
+    def bwd(res, dout):
+        q, k, v, out, m_c, l_c = res
+        return _fa_backward_impl(
+            q, k, v, out, m_c, l_c, dout, causal=causal, chunk=chunk
+        )
+
+    fa.defvjp(fwd, bwd)
+    return fa
+
+
+def blockwise_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, chunk: int = 512, q_offset: int = 0,
+) -> jnp.ndarray:
+    """Flash attention with O(S)-memory forward AND backward."""
+    if q_offset:
+        return blockwise_attention_fwd_only(
+            q, k, v, causal=causal, chunk=chunk, q_offset=q_offset
+        )
+    return _make_flash(causal, chunk)(q, k, v)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def local_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, window: int
+) -> jnp.ndarray:
+    """Exact causal sliding-window attention, O(S · 2w).
+
+    Queries are chunked at the window size; each chunk attends its own
+    and the previous chunk with the in-window causal mask.
+    """
+    b, s, h, hd = q.shape
+    w = window
+    scale = hd ** -0.5
+    n = -(-s // w)
+    pad = n * w - s
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(b, n, w, h, hd)
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(b, n, w, h, hd)
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).reshape(b, n, w, h, hd)
+    # previous chunk of K/V (zeros for the first)
+    k_prev = jnp.concatenate([jnp.zeros_like(kp[:, :1]), kp[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vp[:, :1]), vp[:, :-1]], axis=1)
+    kk = jnp.concatenate([k_prev, kp], axis=2)  # (B,n,2w,H,hd)
+    vv = jnp.concatenate([v_prev, vp], axis=2)
+
+    srel_q = jnp.arange(w)
+    srel_k = jnp.arange(2 * w) - w  # position relative to chunk start
+    # causal within window: k_rel <= q_rel and q_rel - k_rel < w
+    mask_rel = (srel_k[None, :] <= srel_q[:, None]) & (
+        srel_q[:, None] - srel_k[None, :] < w
+    )  # (w, 2w)
+    chunk_ids = jnp.arange(n)
+    k_abs = chunk_ids[:, None] * w + srel_k[None, :]  # (n, 2w) absolute position
+    valid_abs = (k_abs >= 0) & (k_abs < s)  # kills chunk-0 "previous" and tail pad
+
+    scores = jnp.einsum("bnqhd,bnkhd->bnhqk", qp, kk).astype(jnp.float32) * scale
+    m = mask_rel[None, None, None, :, :] & valid_abs[None, :, None, None, :]
+    scores = jnp.where(m, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, vv)
+    return out.reshape(b, n * w, h, hd)[:, :s].astype(q.dtype)
+
+
+def cross_attention_blockwise(q, k, v, *, chunk: int = 512) -> jnp.ndarray:
+    """Full (non-causal) attention — encoder-decoder / VLM image fusion."""
+    return blockwise_attention(q, k, v, causal=False, chunk=chunk)
+
+
+@partial(jax.jit, static_argnames=("window",))
+def decode_attention(
+    q1: jnp.ndarray,        # (B, 1, H, hd) — the new token's query
+    cache_k: jnp.ndarray,   # (B, S, KV, hd)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,       # scalar int32: number of valid cache entries
+    *,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Single-token decode attention over a (possibly windowed) KV cache."""
+    b, s, kv, hd = cache_k.shape
+    h = q1.shape[2]
+    groups = h // kv
+    k = _expand_kv(cache_k, groups)
+    v = _expand_kv(cache_v, groups)
+    scale = hd ** -0.5
+    s_pos = jnp.arange(s)
+    valid = s_pos[None, None, :] < pos
+    if window:
+        valid = valid & (s_pos[None, None, :] >= pos - window)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q1, k).astype(jnp.float32) * scale
+    scores = jnp.where(valid[:, :, None, :] if valid.ndim == 3 else valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v).astype(q1.dtype)
+
+
+def swiglu(x: jnp.ndarray, gate: jnp.ndarray, up: jnp.ndarray, down: jnp.ndarray) -> jnp.ndarray:
+    g = x @ gate
+    u = x @ up
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u) @ down
+
+
+def gelu_mlp(x: jnp.ndarray, up: jnp.ndarray, down: jnp.ndarray) -> jnp.ndarray:
+    """GPT-BigCode-style MLP (granite code models): up → GELU → down."""
+    u = x @ up
+    return jax.nn.gelu(u.astype(jnp.float32), approximate=True).astype(u.dtype) @ down

@@ -1,0 +1,339 @@
+"""Model assembly: embedding → pattern-grouped layer scans → loss/decode.
+
+Key structural choices (DESIGN.md §6):
+- layers are stacked **per block kind in pattern order** and driven by
+  ``lax.scan`` over each consecutive run of the same kind → the HLO
+  contains one body per kind regardless of depth;
+- every scanned block is wrapped in ``jax.checkpoint`` (full remat per
+  layer) so the train working set is one layer's activations;
+- the LM cross-entropy is computed in sequence chunks (``lax.map``) so
+  (B, S, V) logits never materialize — at 405B/128k-vocab scale the full
+  logits tensor would dwarf HBM;
+- RoPE tables are computed inside the jitted function (no multi-hundred-
+  MB weak-type constants baked into the HLO at 500k context).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import BlockCtx, block_decode, block_fwd, cache_spec, init_block
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.layers import rmsnorm, rope_tables
+from repro.models.partitioning import constrain_batch
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------- params
+
+
+def group_runs(pattern: tuple[str, ...]) -> list[tuple[str, int]]:
+    """Consecutive same-kind runs: ('a','a','b','a') → [(a,2),(b,1),(a,1)]."""
+    runs: list[tuple[str, int]] = []
+    for k in pattern:
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    return runs
+
+
+def _stack_layers(key, kinds: tuple[str, ...], cfg: ArchConfig, dtype) -> dict:
+    """Init each layer then stack per kind (pattern order preserved)."""
+    per_kind: dict[str, list] = {}
+    keys = jax.random.split(key, len(kinds))
+    for k, kind in zip(keys, kinds):
+        per_kind.setdefault(kind, []).append(init_block(k, kind, cfg, dtype))
+    return {
+        kind: jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+        for kind, layers in per_kind.items()
+    }
+
+
+def param_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> dict:
+    dtype = param_dtype(cfg)
+    k_embed, k_layers, k_enc, k_front = jax.random.split(key, 4)
+    params: dict = {
+        "embed": (jax.random.normal(k_embed, (cfg.vocab, cfg.d_model)) * 0.02).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": _stack_layers(k_layers, cfg.layer_pattern(), cfg, dtype),
+    }
+    if cfg.is_encdec:
+        params["enc_layers"] = _stack_layers(k_enc, cfg.encoder_pattern(), cfg, dtype)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if cfg.frontend is not None:
+        params["frontend_proj"] = (
+            jax.random.normal(k_front, (cfg.d_frontend, cfg.d_model))
+            * cfg.d_frontend ** -0.5
+        ).astype(dtype)
+    return params
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params: dict, cfg: ArchConfig) -> int:
+    """MoE-aware: per-token active params (top-k of E experts)."""
+    total = param_count(params)
+    if not cfg.n_experts:
+        return total
+    expert_leaves = 0
+    for kind in ("moe", "arctic"):
+        stack = params["layers"].get(kind)
+        if stack is not None and "moe" in stack:
+            for name in ("w_gate", "w_up", "w_down"):
+                expert_leaves += int(stack["moe"][name].size)
+    active_frac = cfg.experts_per_token / cfg.n_experts
+    return int(total - expert_leaves * (1.0 - active_frac))
+
+
+# --------------------------------------------------------------- forward
+
+
+def _run_layers(
+    layers: dict,
+    pattern: tuple[str, ...],
+    x: jnp.ndarray,
+    ctx: BlockCtx,
+    *,
+    remat: bool = True,
+):
+    """Scan pattern runs. Returns (x, aux_sum[3], caches_by_kind|None)."""
+    offsets: dict[str, int] = {}
+    aux_total = jnp.zeros(3, jnp.float32)
+    caches: dict[str, list] = {}
+    for kind, count in group_runs(pattern):
+        off = offsets.get(kind, 0)
+        offsets[kind] = off + count
+        p_run = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, off, off + count), layers[kind]
+        )
+
+        def body(xc, pl, _kind=kind):
+            xo, aux, cache = block_fwd(_kind, pl, xc, ctx)
+            return constrain_batch(xo), aux, cache
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        def scan_body(xc, pl):
+            xo, aux, cache = body(xc, pl)
+            return xo, (aux, cache)
+
+        x, (auxs, cache_run) = jax.lax.scan(scan_body, x, p_run)
+        aux_total = aux_total + auxs.sum(axis=0)
+        if ctx.collect_cache:
+            caches.setdefault(kind, []).append(cache_run)
+    if ctx.collect_cache:
+        stacked = {
+            kind: jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+            for kind, parts in caches.items()
+        }
+        return x, aux_total, stacked
+    return x, aux_total, None
+
+
+def encoder_forward(params: dict, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Audio/vision frontend STUB consumption: precomputed embeddings →
+    projection → bidirectional encoder stack (seamless) or straight
+    projection (VLM)."""
+    x = constrain_batch(frames.astype(param_dtype(cfg)) @ params["frontend_proj"])
+    if cfg.is_encdec:
+        cos, sin = rope_tables(x.shape[1], cfg.head_dim, cfg.rope_theta)
+        ctx = BlockCtx(cfg=cfg, rope_cos=cos, rope_sin=sin, causal=False)
+        x, _, _ = _run_layers(params["enc_layers"], cfg.encoder_pattern(), x, ctx)
+        x = rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+    return x
+
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,              # (B, S) int32
+    *,
+    frontend: jnp.ndarray | None = None,  # (B, T, d_frontend) stub embeddings
+    collect_cache: bool = False,
+    cache_len: int = 0,               # decode-cache capacity (≥ S) when collecting
+) -> tuple[jnp.ndarray, jnp.ndarray, PyTree]:
+    """→ (hidden (B,S,D), aux[3], caches|None)."""
+    b, s = tokens.shape
+    x = constrain_batch(params["embed"][tokens])  # vocab-sharded gather
+    enc_out = None
+    if frontend is not None:
+        enc_out = encoder_forward(params, cfg, frontend)
+    cos, sin = rope_tables(s, cfg.head_dim, cfg.rope_theta)
+    ctx = BlockCtx(
+        cfg=cfg, rope_cos=cos, rope_sin=sin, enc_out=enc_out,
+        collect_cache=collect_cache, cache_len=max(cache_len, s),
+    )
+    x, aux, caches = _run_layers(params["layers"], cfg.layer_pattern(), x, ctx)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux, caches
+
+
+# ------------------------------------------------------------------ loss
+
+LB_WEIGHT = 0.01
+Z_WEIGHT = 1e-3
+
+
+def lm_loss(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    labels: jnp.ndarray,
+    *,
+    frontend: jnp.ndarray | None = None,
+    loss_chunk: int = 512,
+) -> tuple[jnp.ndarray, dict]:
+    hidden, aux, _ = forward(params, cfg, tokens, frontend=frontend)
+    b, s, d = hidden.shape
+    embed = params["embed"]
+    c = min(loss_chunk, s)
+    n = s // c  # shapes are powers of two in all assigned configs
+
+    hid = hidden[:, : n * c].reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    lab = labels[:, : n * c].reshape(b, n, c).transpose(1, 0, 2)
+
+    def chunk_ce(args):
+        h_c, l_c = args                      # (B, c, D), (B, c)
+        logits = (h_c @ embed.T).astype(jnp.float32)          # (B, c, V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        return (lse - ll).sum()
+
+    total = jax.lax.map(chunk_ce, (hid, lab)).sum()
+    ce = total / (b * n * c)
+    loss = ce + LB_WEIGHT * aux[0] + Z_WEIGHT * aux[1]
+    # the paper's feature tap: pooled final hidden state, detached
+    features = jax.lax.stop_gradient(hidden.mean(axis=1).astype(jnp.float32))
+    metrics = {
+        "ce": ce, "lb_loss": aux[0], "z_loss": aux[1], "dropped_frac": aux[2],
+        "features": features,
+    }
+    return loss, metrics
+
+
+# --------------------------------------------------------------- serving
+
+
+def prefill(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,
+    *,
+    frontend: jnp.ndarray | None = None,
+    cache_len: int = 0,
+) -> tuple[jnp.ndarray, PyTree, jnp.ndarray]:
+    """→ (last-token logits (B,V), caches, features (B,D))."""
+    hidden, _, caches = forward(
+        params, cfg, tokens, frontend=frontend, collect_cache=True,
+        cache_len=cache_len,
+    )
+    last = hidden[:, -1]
+    logits = (last @ params["embed"].T).astype(jnp.float32)
+    features = jax.lax.stop_gradient(hidden.mean(axis=1).astype(jnp.float32))
+    return logits, caches, features
+
+
+def decode_step(
+    params: dict,
+    cfg: ArchConfig,
+    token: jnp.ndarray,              # (B,) int32 — the newest token
+    caches: dict,                    # {kind: stacked layer caches}
+    pos: jnp.ndarray,                # scalar int32 current position
+    *,
+    enc_out: jnp.ndarray | None = None,
+    max_seq: int = 0,
+) -> tuple[jnp.ndarray, dict]:
+    """One serve step: emit logits for the next token, update caches."""
+    x = constrain_batch(params["embed"][token])       # (B, D)
+    assert max_seq > 0, "decode_step needs max_seq for the RoPE table"
+    cos, sin = rope_tables(max_seq + 1, cfg.head_dim, cfg.rope_theta)
+    ctx = BlockCtx(cfg=cfg, rope_cos=cos, rope_sin=sin, enc_out=enc_out, pos=pos)
+
+    pattern = cfg.layer_pattern()
+    offsets: dict[str, int] = {}
+    new_caches = {k: v for k, v in caches.items()}
+    for kind, count in group_runs(pattern):
+        off = offsets.get(kind, 0)
+        offsets[kind] = off + count
+        p_run = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, off, off + count),
+            params["layers"][kind],
+        )
+        cache_run = jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, off, off + count), new_caches[kind]
+        )
+
+        def scan_body(xc, inp, _kind=kind):
+            pl, cl = inp
+            xo, c_new = block_decode(_kind, pl, xc, cl, ctx)
+            return xo, c_new
+
+        x, cache_out = jax.lax.scan(scan_body, x, (p_run, cache_run))
+        new_caches[kind] = jax.tree.map(
+            lambda full, upd: jax.lax.dynamic_update_slice_in_dim(full, upd, off, 0),
+            new_caches[kind], cache_out,
+        )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, new_caches
+
+
+# ------------------------------------------------------------ input specs
+
+
+def cache_shape_structs(cfg: ArchConfig, batch: int, seq_len: int) -> dict:
+    """{kind: stacked ShapeDtypeStruct tree} matching decode_step's caches."""
+    pattern = cfg.layer_pattern()
+    counts: dict[str, int] = {}
+    for k in pattern:
+        counts[k] = counts.get(k, 0) + 1
+    out = {}
+    for kind, n in counts.items():
+        spec = cache_spec(kind, cfg, batch, seq_len)
+        out[kind] = jax.tree.map(
+            lambda sd: jax.ShapeDtypeStruct((n, *sd[0]), sd[1]),
+            spec,
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple),
+        )
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    specs: dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.frontend is not None:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_frontend), f32
+            )
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.frontend is not None:
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_frontend), f32
+            )
+    else:  # decode: one token against a seq_len cache
+        specs["token"] = jax.ShapeDtypeStruct((b,), i32)
+        specs["caches"] = cache_shape_structs(cfg, b, s)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+        if cfg.frontend is not None:
+            specs["enc_out"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), f32
+            )
+    return specs

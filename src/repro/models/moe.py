@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-factor dispatch.
+
+Switch/Flaxformer-style einsum dispatch: tokens are bucketed into groups
+(``tokens_per_group``), each token picks top-k experts, a per-expert
+capacity ``cap = ts·k/E·cf`` bounds the dispatch tensor to
+(groups, ts, E, cap) — overflowing tokens are dropped (standard
+capacity-based MoE semantics). The expert dimension is sharded over the
+"model" mesh axis when divisible, which makes the dispatch/return
+einsums lower to all-to-alls under GSPMD (the collective term of the
+MoE roofline).
+
+Aux losses: router z-loss + load-balance loss (Switch Transformer),
+returned for the train step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn(
+    p: dict,
+    x: jnp.ndarray,                 # (B, S, D)
+    *,
+    n_experts: int,
+    top_k: int,
+    tokens_per_group: int,
+    capacity_factor: float = 1.25,
+    dispatch: str = "einsum",
+) -> tuple[jnp.ndarray, dict]:
+    """dispatch="scatter" (default): tokens are scatter-added into
+    per-expert capacity buckets and gathered back — zero matmul FLOPs
+    for routing (§Perf iteration 3: the einsum dispatch costs
+    tokens·E·cap·d MACs, 25× granite-moe's useful compute).
+    dispatch="einsum": the classic Switch/Flaxformer one-hot form,
+    kept as the paper-faithful-baseline comparison point.
+    """
+    b, s, d = x.shape
+    tokens = b * s
+    ts = min(tokens_per_group, tokens)
+    g = -(-tokens // ts)
+    pad = g * ts - tokens
+    xf = x.reshape(tokens, d)
+    if pad:  # pad to a whole number of groups; padded tokens are dropped on return
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = xf.reshape(g, ts, d)
+    if dispatch == "scatter":
+        return _moe_scatter(
+            p, xg, b, s, d, tokens,
+            n_experts=n_experts, top_k=top_k, capacity_factor=capacity_factor,
+        )
+
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)  # (g, ts, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)                      # (g, ts, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(ts * top_k / n_experts * capacity_factor))
+
+    counts = jnp.zeros((g, n_experts), jnp.int32)
+    dispatch = jnp.zeros((g, ts, n_experts, cap), xg.dtype)
+    combine = jnp.zeros((g, ts, n_experts, cap), jnp.float32)
+    for kk in range(top_k):  # K is small and static — unrolled
+        m = jax.nn.one_hot(idx[:, :, kk], n_experts, dtype=jnp.int32)   # (g,ts,E)
+        pos = counts[:, None, :] + jnp.cumsum(m, axis=1) - m            # slot before me
+        keep = (pos < cap) & (m > 0)
+        oh = jax.nn.one_hot(pos, cap, dtype=xg.dtype) * keep[..., None].astype(xg.dtype)
+        dispatch = dispatch + oh
+        combine = combine + oh.astype(jnp.float32) * gate_vals[:, :, kk, None, None]
+        counts = counts + m.sum(axis=1)
+
+    # dispatch → per-expert buffers (all-to-all under expert sharding)
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # (g,E,cap,D)
+    h_gate = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    h_up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = jax.nn.silu(h_gate.astype(jnp.float32)).astype(h_up.dtype) * h_up
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])           # (g,E,cap,D)
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(expert_out.dtype), expert_out)
+    y = y.reshape(g * ts, d)[:tokens]  # drop grouping pad
+
+    # --- aux losses (Switch Transformer §2.2) ---------------------------------
+    # load balance: E · Σ_e fraction_tokens_e · mean_prob_e
+    top1 = jax.nn.one_hot(idx[:, :, 0], n_experts, dtype=jnp.float32)
+    frac_tokens = top1.mean(axis=1)                                    # (g, E)
+    mean_prob = probs.mean(axis=1)
+    lb_loss = n_experts * jnp.mean(jnp.sum(frac_tokens * mean_prob, axis=-1))
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - (dispatch.sum(axis=(2, 3)) > 0).astype(jnp.float32).mean()
+
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return y.reshape(b, s, d), aux
+
+
+def _moe_scatter(
+    p: dict,
+    xg: jnp.ndarray,               # (g, ts, D)
+    b: int, s: int, d: int, tokens: int,
+    *,
+    n_experts: int,
+    top_k: int,
+    capacity_factor: float,
+) -> tuple[jnp.ndarray, dict]:
+    """Scatter/gather dispatch: identical capacity semantics to the
+    einsum path (same slot assignment, same drops), but tokens move via
+    scatter-add and gather instead of one-hot matmuls."""
+    g, ts, _ = xg.shape
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, top_k)                  # (g, ts, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(1, int(ts * top_k / n_experts * capacity_factor))
+    n_slots = n_experts * cap
+
+    # slot assignment — same order as the einsum path's cumsum
+    counts = jnp.zeros((g, n_experts), jnp.int32)
+    slot_list, keep_list = [], []
+    for kk in range(top_k):
+        m = jax.nn.one_hot(idx[:, :, kk], n_experts, dtype=jnp.int32)
+        pos = counts[:, None, :] + jnp.cumsum(m, axis=1) - m
+        pos_k = jnp.take_along_axis(pos, idx[:, :, kk:kk + 1], axis=-1)[..., 0]
+        keep = pos_k < cap
+        slot = idx[:, :, kk] * cap + jnp.minimum(pos_k, cap - 1)
+        slot_list.append(jnp.where(keep, slot, n_slots))          # dump slot
+        keep_list.append(keep)
+        counts = counts + m.sum(axis=1)
+    slots = jnp.stack(slot_list, axis=-1)                          # (g, ts, K)
+    keeps = jnp.stack(keep_list, axis=-1)
+
+    def per_group(xg_i, slots_i, gates_i, keeps_i):
+        buf = jnp.zeros((n_slots + 1, d), xg_i.dtype)
+        flat_slots = slots_i.reshape(-1)                           # (ts*K,)
+        tok_idx = jnp.repeat(jnp.arange(ts), top_k)
+        buf = buf.at[flat_slots].add(xg_i[tok_idx])                # scatter-add
+        expert_in = buf[:n_slots].reshape(n_experts, cap, d)
+        h_g = jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"])
+        h_u = jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+        h = jax.nn.silu(h_g.astype(jnp.float32)).astype(h_u.dtype) * h_u
+        expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        out_flat = jnp.concatenate(
+            [expert_out.reshape(n_slots, d), jnp.zeros((1, d), expert_out.dtype)]
+        )
+        y_tok = out_flat[slots_i]                                  # (ts, K, d) gather
+        w = (gates_i * keeps_i).astype(y_tok.dtype)
+        return (y_tok * w[..., None]).sum(axis=1)
+
+    y = jax.vmap(per_group)(xg, slots, gate_vals, keeps)           # (g, ts, d)
+    y = y.reshape(g * ts, d)[:tokens].reshape(b, s, d)
+
+    top1 = jax.nn.one_hot(idx[:, :, 0], n_experts, dtype=jnp.float32)
+    lb_loss = n_experts * jnp.mean(
+        jnp.sum(top1.mean(axis=1) * probs.mean(axis=1), axis=-1)
+    )
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - keeps.astype(jnp.float32).mean()
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}

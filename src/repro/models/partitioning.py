@@ -1,0 +1,66 @@
+"""Activation sharding constraints (GSPMD anchoring).
+
+Without explicit constraints GSPMD is free to replicate the batch dim
+and shard activations along d_model — which it chose to do for our
+FSDP-style weight shardings, inflating per-device activation traffic by
+the data-parallel degree. ``constrain_batch`` re-anchors the batch dim
+of every block's output onto the ("pod","data") axes.
+
+The mesh is installed by the launcher (dryrun/train) via ``use_mesh``;
+without it every call is a no-op, so CPU unit tests and the federated
+benchmarks never notice.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: dict[str, Any] = {"mesh": None, "batch_axes": ("data",)}
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, batch_axes: tuple[str, ...]):
+    old = dict(_CTX)
+    _CTX["mesh"] = mesh
+    _CTX["batch_axes"] = tuple(batch_axes)
+    try:
+        yield
+    finally:
+        _CTX.update(old)
+
+
+def _dp_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return math.prod(sizes[a] for a in axes)
+
+
+def constrain_batch(x: jax.Array, *, batch_dim: int = 0):
+    """Anchor x's batch dim on the data axes (no-op without a mesh or
+    when the batch doesn't divide — e.g. long_500k's batch=1)."""
+    mesh = _CTX["mesh"]
+    if mesh is None or not hasattr(x, "shape") or x.ndim == 0:
+        return x
+    axes = _CTX["batch_axes"]
+    if x.shape[batch_dim] % _dp_size(mesh, axes):
+        return x
+    dims: list = [None] * x.ndim
+    dims[batch_dim] = axes
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))
+
+
+def constrain_seq(x: jax.Array, *, seq_dim: int):
+    """Context parallelism: anchor a sequence dim on the data axes
+    (long_500k decode caches)."""
+    mesh = _CTX["mesh"]
+    if mesh is None:
+        return x
+    axes = _CTX["batch_axes"]
+    if x.shape[seq_dim] % _dp_size(mesh, axes):
+        return x
+    dims: list = [None] * x.ndim
+    dims[seq_dim] = axes
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))

@@ -1,0 +1,270 @@
+"""Recurrent sequence mixers: selective SSM (Mamba-style), xLSTM's
+mLSTM and sLSTM.
+
+TPU adaptation (DESIGN.md §4): instead of a per-timestep scan (latency-
+bound on a systolic machine) the linear-recurrent mixers use a
+**chunked gated-linear-attention engine** — the Mamba-2/SSD
+factorization. Per chunk of length C the recurrence
+
+    h_t = a_t · h_{t-1} + k_t v_tᵀ ,    y_t = h_t q_t
+
+is computed with three MXU matmuls (intra-chunk (C×C) decay-masked
+attention, state broadcast, state update) and a ``lax.scan`` only over
+chunks. Everything is exact (log-space cumulative decays), and the
+largest transient is (B, H, C, C) — no (B, S, d, n) scan element ever
+materializes.
+
+sLSTM has a genuinely nonlinear recurrence (h_{t-1} feeds the gates), so
+it keeps a per-timestep ``lax.scan`` — the paper-faithful choice; xLSTM
+places sLSTM in only 1/8 of the blocks.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------- engine
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def chunked_linear_attention(
+    q: jnp.ndarray,        # (B, S, H, dk)
+    k: jnp.ndarray,        # (B, S, H, dk)
+    v: jnp.ndarray,        # (B, S, H, dv)
+    log_a: jnp.ndarray,    # (B, S, H) per-token log decay (≤ 0)
+    *,
+    chunk: int = 128,
+    init_state: jnp.ndarray | None = None,  # (B, H, dk, dv)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """y_t = q_tᵀ h_t with h_t = a_t h_{t-1} + k_t v_tᵀ. Returns (y, h_S)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    n = -(-s // c)
+    pad = n * c - s
+
+    def pad_seq(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    # zero decay (log a = 0 → a = 1) on padding keeps the state unchanged
+    qp = pad_seq(q).reshape(b, n, c, h, dk)
+    kp = pad_seq(k).reshape(b, n, c, h, dk)
+    vp = pad_seq(v).reshape(b, n, c, h, dv)
+    lap = pad_seq(log_a).reshape(b, n, c, h)
+    # padded k/v must not contribute: zero them
+    if pad:
+        valid = (jnp.arange(n * c).reshape(n, c) < s)[None, :, :, None]
+        kp = kp * valid[..., None]
+        vp = vp * valid[..., None]
+
+    cum = jnp.cumsum(lap, axis=2)          # (B, n, C, H) inclusive Σ log a
+    total = cum[:, :, -1, :]               # (B, n, H)
+
+    def step(state, inp):
+        q_c, k_c, v_c, cum_c, tot_c = inp  # leading dim B
+        # inter-chunk: y += (q ⊙ e^{cum}) S_prev
+        decay_q = jnp.exp(cum_c)                         # (B,C,H)
+        y_inter = jnp.einsum(
+            "bchk,bhkv->bchv", q_c * decay_q[..., None], state
+        )
+        # intra-chunk: scores[t,τ] = q_t·k_τ · e^{cum_t − cum_τ}, τ ≤ t
+        scores = jnp.einsum("bchk,bdhk->bhcd", q_c, k_c).astype(jnp.float32)
+        rel = cum_c.transpose(0, 2, 1)[:, :, :, None] - cum_c.transpose(0, 2, 1)[:, :, None, :]
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        gate = jnp.where(causal[None, None], jnp.exp(rel), 0.0)
+        y_intra = jnp.einsum(
+            "bhcd,bdhv->bchv", (scores * gate).astype(v_c.dtype), v_c
+        )
+        # state update: S ← e^{tot} S + Σ_τ e^{tot − cum_τ} k_τ v_τᵀ
+        w = jnp.exp(tot_c[:, None, :] - cum_c)           # (B,C,H)
+        s_new = state * jnp.exp(tot_c)[:, :, None, None]  # tot_c: (B,H)
+        s_new = s_new + jnp.einsum("bchk,bchv->bhkv", k_c * w[..., None], v_c)
+        return s_new, (y_inter + y_intra).astype(q_c.dtype)
+
+    s0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((b, h, dk, dv), jnp.float32)
+    )
+    xs = (
+        qp.transpose(1, 0, 2, 3, 4),
+        kp.transpose(1, 0, 2, 3, 4),
+        vp.transpose(1, 0, 2, 3, 4),
+        cum.transpose(1, 0, 2, 3),
+        total.transpose(1, 0, 2),
+    )
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n * c, h, dv)[:, :s]
+    return y, final
+
+
+def linear_attention_decode_step(
+    state: jnp.ndarray,    # (B, H, dk, dv)
+    q: jnp.ndarray,        # (B, H, dk)
+    k: jnp.ndarray,
+    v: jnp.ndarray,        # (B, H, dv)
+    log_a: jnp.ndarray,    # (B, H)
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """O(1) recurrent decode: h ← a·h + k vᵀ; y = qᵀ h."""
+    a = jnp.exp(log_a)[..., None, None]
+    state = state * a + k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", q, state)
+    return state, y
+
+
+# ---------------------------------------------------------------- Mamba
+
+
+def mamba_mix(p: dict, x: jnp.ndarray, *, n_heads: int, ssm_state: int, chunk: int = 128):
+    """Selective SSM with per-head scalar decay (Mamba-2 style heads).
+
+    x: (B, S, D). Params: in_proj (D, 2·Di), dt_proj (Di→H via mean pool
+    per head), B/C projections (Di, n), A_log (H,), D_skip (Di,),
+    out_proj (Di, D). Di = D (mamba_expand=1 for Hymba heads).
+
+    The depthwise causal conv1d of the original Mamba is omitted
+    (documented in DESIGN.md §8 — negligible FLOPs, no TPU analogue
+    needed for the roofline).
+    """
+    b, s, d = x.shape
+    xz = x @ p["in_proj"]                          # (B,S,2Di)
+    di = xz.shape[-1] // 2
+    xs, z = jnp.split(xz, 2, axis=-1)
+    dh = di // n_heads
+
+    dt = jax.nn.softplus(xs @ p["dt_proj"] + p["dt_bias"])   # (B,S,H)
+    log_a = -dt * jnp.exp(p["a_log"])[None, None, :]          # (B,S,H), ≤0
+    bmat = (xs @ p["b_proj"]).reshape(b, s, n_heads, ssm_state)
+    cmat = (xs @ p["c_proj"]).reshape(b, s, n_heads, ssm_state)
+    vv = (xs * dt.repeat(dh, axis=-1)).reshape(b, s, n_heads, dh)
+
+    y, state = chunked_linear_attention(cmat, bmat, vv, log_a, chunk=chunk)
+    y = y.reshape(b, s, di) + xs * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return y @ p["out_proj"], state
+
+
+def mamba_decode_step(p: dict, state: jnp.ndarray, x: jnp.ndarray, *, n_heads: int, ssm_state: int):
+    """x: (B, D) one token; state: (B, H, n, dh)."""
+    b, d = x.shape
+    xz = x @ p["in_proj"]
+    di = xz.shape[-1] // 2
+    xs, z = jnp.split(xz, 2, axis=-1)
+    dh = di // n_heads
+    dt = jax.nn.softplus(xs @ p["dt_proj"] + p["dt_bias"])    # (B,H)
+    log_a = -dt * jnp.exp(p["a_log"])[None, :]
+    bmat = (xs @ p["b_proj"]).reshape(b, n_heads, ssm_state)
+    cmat = (xs @ p["c_proj"]).reshape(b, n_heads, ssm_state)
+    vv = (xs * dt.repeat(dh, axis=-1)).reshape(b, n_heads, dh)
+    state, y = linear_attention_decode_step(state, cmat, bmat, vv, log_a)
+    y = y.reshape(b, di) + xs * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return state, y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------- mLSTM
+
+
+def mlstm_mix(p: dict, x: jnp.ndarray, *, n_heads: int, chunk: int = 128):
+    """xLSTM matrix-memory block mixer.
+
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ;  n_t = f_t n_{t-1} + i_t k_t;
+    y_t = (C_t q_t) / max(|n_t·q_t|, 1).
+
+    Mapped onto the chunked engine by augmenting v with a ones column so
+    numerator and normalizer come out of one pass. Exponential-gate
+    stabilization is folded into the per-token log decay (log f is kept
+    in log space end-to-end; i_t is applied as a scale on k).
+    """
+    b, s, d = x.shape
+    dh = d // n_heads
+    q = (x @ p["wq"]).reshape(b, s, n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, s, n_heads, dh) / jnp.sqrt(dh)
+    v = (x @ p["wv"]).reshape(b, s, n_heads, dh)
+    log_f = jax.nn.log_sigmoid((x @ p["wf"]) + p["bf"])       # (B,S,H) ≤ 0
+    log_i = (x @ p["wi"]) + p["bi"]                            # (B,S,H)
+    i_gate = jnp.exp(jnp.minimum(log_i, 0.0))                  # stabilized input gate
+    o_gate = jax.nn.sigmoid(x @ p["wo_gate"] + p["bo"])        # (B,S,H)
+
+    k_scaled = k * i_gate[..., None]
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y_aug, state = chunked_linear_attention(q, k_scaled, v_aug, log_f, chunk=chunk)
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    y = y * o_gate[..., None]
+    return y.reshape(b, s, d) @ p["out_proj"], state
+
+
+def mlstm_decode_step(p: dict, state: jnp.ndarray, x: jnp.ndarray, *, n_heads: int):
+    """state: (B, H, dh, dh+1) — matrix memory with normalizer column."""
+    b, d = x.shape
+    dh = d // n_heads
+    q = (x @ p["wq"]).reshape(b, n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, n_heads, dh) / jnp.sqrt(dh)
+    v = (x @ p["wv"]).reshape(b, n_heads, dh)
+    log_f = jax.nn.log_sigmoid((x @ p["wf"]) + p["bf"])
+    log_i = (x @ p["wi"]) + p["bi"]
+    i_gate = jnp.exp(jnp.minimum(log_i, 0.0))
+    o_gate = jax.nn.sigmoid(x @ p["wo_gate"] + p["bo"])
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    state, y_aug = linear_attention_decode_step(
+        state, q, k * i_gate[..., None], v_aug, log_f
+    )
+    y = y_aug[..., :-1] / jnp.maximum(jnp.abs(y_aug[..., -1:]), 1.0)
+    y = y * o_gate[..., None]
+    return state, y.reshape(b, d) @ p["out_proj"]
+
+
+# ---------------------------------------------------------------- sLSTM
+
+
+def slstm_mix(p: dict, x: jnp.ndarray, *, n_heads: int):
+    """xLSTM scalar-memory block: true nonlinear recurrence (h feeds the
+    gates) → per-timestep lax.scan, exponential gating with the m_t
+    stabilizer of the xLSTM paper."""
+    b, s, d = x.shape
+    dh = d // n_heads
+    gates_x = x @ p["w_gates"] + p["b_gates"]                 # (B,S,4D)
+
+    def step(carry, gx):
+        h, c, n, m = carry                                    # each (B, D)
+        rec = jnp.einsum("bhd,hde->bhe", h.reshape(b, n_heads, dh), p["r_gates"]).reshape(b, 4 * d)
+        gi, gf, gz, go = jnp.split(gx + rec, 4, axis=-1)
+        log_f = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(log_f + m, gi)
+        i_s = jnp.exp(gi - m_new)
+        f_s = jnp.exp(log_f + m - m_new)
+        c_new = f_s * c + i_s * jnp.tanh(gz)
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    z = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    final, hs = jax.lax.scan(
+        step, (z, z, z, m0), gates_x.astype(jnp.float32).transpose(1, 0, 2)
+    )
+    y = hs.transpose(1, 0, 2).astype(x.dtype)                 # (B,S,D)
+    return y @ p["out_proj"], final
+
+
+def slstm_decode_step(p: dict, state, x: jnp.ndarray, *, n_heads: int):
+    """state: (h, c, n, m) each (B, D)."""
+    b, d = x.shape
+    dh = d // n_heads
+    h, c, n, m = state
+    gx = x @ p["w_gates"] + p["b_gates"]
+    rec = jnp.einsum("bhd,hde->bhe", h.reshape(b, n_heads, dh), p["r_gates"]).reshape(b, 4 * d)
+    gi, gf, gz, go = jnp.split((gx + rec).astype(jnp.float32), 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + m, gi)
+    i_s = jnp.exp(gi - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * jnp.tanh(gz)
+    n_new = f_s * n + i_s
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1.0)
+    y = h_new.astype(x.dtype) @ p["out_proj"]
+    return (h_new, c_new, n_new, m_new), y

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adam,
+    adamw,
+    clip_by_global_norm,
+    sgd,
+)
+
+__all__ = ["Optimizer", "OptState", "adam", "adamw", "sgd", "clip_by_global_norm"]

@@ -1,0 +1,100 @@
+"""Minimal optimizer substrate (optax is not available offline).
+
+Pure-pytree optimizers used by (a) the BP-NN baselines the paper
+compares against and (b) the large-model training steps of the 10
+assigned architectures. Moments can be kept in a reduced dtype
+(bf16) — required to fit Adam state for the ≥100B archs on v5e HBM
+(DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree | None
+    nu: PyTree | None
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, PyTree], tuple[PyTree, OptState]]
+
+
+def _cast_like(tree: PyTree, dtype) -> PyTree:
+    if dtype is None:
+        return tree
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def adam(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    *,
+    moment_dtype=None,
+    weight_decay: float = 0.0,
+) -> Optimizer:
+    """Adam; ``moment_dtype=jnp.bfloat16`` halves optimizer HBM."""
+
+    def init(params: PyTree) -> OptState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, moment_dtype or p.dtype), params
+        )
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads: PyTree, state: OptState, params: PyTree) -> tuple[PyTree, OptState]:
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: b1 * m.astype(g.dtype) + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v.astype(g.dtype) + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + lr_t * weight_decay * p
+            return (p - delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, OptState(step=step, mu=_cast_like(mu, moment_dtype), nu=_cast_like(nu, moment_dtype))
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params: PyTree) -> OptState:
+        mu = jax.tree.map(jnp.zeros_like, params) if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads: PyTree, state: OptState, params: PyTree):
+        step = state.step + 1
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            new = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+            return new, OptState(step=step, mu=mu, nu=None)
+        new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)
+        return new, OptState(step=step, mu=None, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)

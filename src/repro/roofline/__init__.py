@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    HW_V5E,
+    Hardware,
+    RooflineReport,
+    collective_bytes,
+    roofline_from_compiled,
+)
+
+__all__ = ["HW_V5E", "Hardware", "RooflineReport", "collective_bytes", "roofline_from_compiled"]

@@ -1,0 +1,230 @@
+"""Three-term roofline from a compiled dry-run artifact (deliverable g).
+
+    compute    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM_bw)
+    collective = coll_bytes  / (chips × link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the post-SPMD optimized HLO
+text and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, scaled by any
+enclosing while-loop trip count (layer scans place collectives inside
+while bodies — without the trip-count scaling a 126-layer model would
+report one layer's collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass
+class Hardware:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    link_bw: float             # bytes/s per chip (ICI)
+
+
+HW_V5E = Hardware(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[16,128]' → bytes; tuples handled by the caller."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _result_bytes(line: str) -> int:
+    """Sum all shapes on the lhs of `%x = <shapes> op(...)`."""
+    lhs = line.split("=", 1)[1]
+    op_pos = min(
+        (lhs.find(op) for op in COLLECTIVE_OPS if lhs.find(op) >= 0), default=-1
+    )
+    if op_pos < 0:
+        return 0
+    shapes_part = lhs[:op_pos]
+    return sum(
+        _shape_bytes(s) for s in re.findall(r"[a-z0-9]+\[[0-9,]*\]", shapes_part)
+    )
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-op-type collective bytes, scaled by while-loop trip counts.
+
+    Trip counts are inferred per while body from XLA's
+    `known_trip_count={"n":"K"}` / `trip_count="K"` annotations when
+    present; collectives outside loops count once. Returns GLOBAL bytes
+    (sum over all participating devices' result shapes is approximated
+    as result_bytes × 1 — shapes in post-SPMD HLO are already
+    per-device).
+    """
+    totals: dict[str, float] = {op: 0.0 for op in COLLECTIVE_OPS}
+
+    # map computation name -> trip count multiplier from while annotations
+    trip: dict[str, int] = {}
+    for m in re.finditer(
+        r'body=%?([\w.\-]+).*?known_trip_count=\{"?n"?[:=]"?(\d+)"?\}', hlo_text
+    ):
+        trip[m.group(1)] = int(m.group(2))
+    # also catch: while(...), ... backend_config or trip_count attr
+    for m in re.finditer(r'body=%?([\w.\-]+)[^\n]*?trip_count="?(\d+)"?', hlo_text):
+        trip.setdefault(m.group(1), int(m.group(2)))
+
+    current_comp = None
+    for line in hlo_text.splitlines():
+        comp_m = re.match(r"^\s*%?([\w.\-]+)\s*\([^)]*\)\s*->", line)
+        if comp_m:
+            current_comp = comp_m.group(1)
+            continue
+        if "ENTRY" in line:
+            current_comp = "__entry__"
+            continue
+        if "=" not in line:
+            continue
+        if not any(op in line for op in COLLECTIVE_OPS):
+            continue
+        if "-start" in line and "-done" not in line:
+            pass  # async start carries the shape; done repeats it
+        if "-done" in line:
+            continue
+        b = _result_bytes(line)
+        if b == 0:
+            continue
+        mult = trip.get(current_comp or "", 1)
+        for op in COLLECTIVE_OPS:
+            if op in line.split("=", 1)[1]:
+                totals[op] += b * mult
+                break
+    return totals
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    attn_interior_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict[str, float]
+    model_flops: float
+    per_device_memory: dict[str, float]
+    hw: Hardware = dataclasses.field(default_factory=lambda: HW_V5E)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * self.hw.peak_flops)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_memory_fused_attn(self) -> float:
+        """Memory term if attention runs as one fused Pallas kernel
+        (kernels/flash_attn.py): score chunks stay in VMEM."""
+        return (self.hlo_bytes - self.attn_interior_bytes) / (self.chips * self.hw.hbm_bw)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * self.hw.link_bw)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes, "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_memory_fused_attn_s": self.t_memory_fused_attn,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "per_device_memory": self.per_device_memory,
+        }
+
+
+def roofline_from_compiled(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    model_flops: float,
+) -> RooflineReport:
+    """All terms derive from our HLO walk (repro.roofline.hlo_costs) —
+    XLA's cost_analysis counts while bodies once and our programs scan
+    everything, so its numbers are recorded separately for reference
+    (dryrun JSON 'cost_analysis' field) but not used here.
+
+    hlo_costs returns PER-DEVICE numbers; the roofline terms divide
+    global work by total chips, so we scale by `chips` first.
+    """
+    from repro.roofline.hlo_costs import analyze_hlo
+
+    hlo = compiled.as_text()
+    walk = analyze_hlo(hlo)
+    flops = walk["flops"] * chips
+    nbytes = walk["bytes"] * chips
+    attn_interior = walk.get("bytes_attn_interior", 0.0) * chips
+    coll = {k: v * chips for k, v in walk["collectives"].items()}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "peak_bytes": float(
+                getattr(ma, "peak_memory_in_bytes", 0) or
+                getattr(ma, "temp_size_in_bytes", 0)
+            ),
+        }
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, attn_interior_bytes=attn_interior,
+        coll_bytes=sum(coll.values()), coll_breakdown=coll,
+        model_flops=model_flops, per_device_memory=mem,
+    )

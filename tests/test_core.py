@@ -1,0 +1,252 @@
+"""Unit tests for repro.core — ELM / OS-ELM / E²LM algebra (paper §3–§4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    UV,
+    ae_score,
+    ae_train_step_guarded,
+    ae_train_stream,
+    bank_score,
+    bank_train_instance,
+    cooperative_update,
+    from_uv,
+    hidden,
+    init_autoencoder,
+    init_oselm,
+    init_slfn,
+    make_bank,
+    oselm_loss,
+    oselm_predict,
+    oselm_step,
+    oselm_step_k1,
+    oselm_train_sequential,
+    predict_elm,
+    to_uv,
+    train_elm,
+    uv_add,
+    uv_replace,
+    uv_sub,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_data(k, rows=256, n=24):
+    return jax.random.normal(jax.random.PRNGKey(k), (rows, n))
+
+
+@pytest.fixture(scope="module")
+def slfn():
+    return init_slfn(KEY, 24, 12)
+
+
+# ---------------------------------------------------------------- ELM
+
+
+def test_elm_fits_linear_map(slfn):
+    """ELM with enough hidden units fits its own hidden-space projection
+    exactly: train on t = H·β* and recover β*."""
+    x = make_data(1)
+    h = hidden(slfn, x, "sigmoid")
+    beta_star = jax.random.normal(jax.random.PRNGKey(9), (12, 4))
+    t = h @ beta_star
+    model = train_elm(slfn, x, t, activation="sigmoid")
+    np.testing.assert_allclose(model.beta, beta_star, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(predict_elm(model, x), t, rtol=1e-3, atol=1e-3)
+
+
+def test_elm_activation_variants(slfn):
+    x = make_data(2)
+    for act in ("sigmoid", "identity", "tanh", "relu"):
+        m = train_elm(slfn, x, x, activation=act)
+        assert m.beta.shape == (12, 24)
+        assert np.isfinite(np.asarray(m.beta)).all()
+
+
+# ------------------------------------------------------------- OS-ELM
+
+
+def test_oselm_init_matches_elm(slfn):
+    """β₀ from Eq. 13 equals the batch ELM solution on the init chunk."""
+    x = make_data(3, rows=64)
+    st = init_oselm(slfn, x, x, activation="sigmoid")
+    elm = train_elm(slfn, x, x, activation="sigmoid")
+    np.testing.assert_allclose(st.beta, elm.beta, rtol=1e-4, atol=1e-4)
+
+
+def test_oselm_sequential_equals_batch(slfn):
+    """The paper's foundation: OS-ELM trained sample-by-sample equals the
+    one-shot batch ELM solution (global optimum, no local minima)."""
+    x = make_data(4)
+    st = init_oselm(slfn, x[:32], x[:32], activation="sigmoid")
+    st = oselm_train_sequential(st, x[32:], x[32:])
+    elm = train_elm(slfn, x, x, activation="sigmoid")
+    np.testing.assert_allclose(st.beta, elm.beta, rtol=1e-3, atol=1e-4)
+
+
+def test_oselm_batchk_equals_k1(slfn):
+    x = make_data(5, rows=48)
+    st = init_oselm(slfn, x[:32], x[:32], activation="sigmoid")
+    st_k = oselm_step(st, x[32:], x[32:])
+    st_1 = st
+    for i in range(32, 48):
+        st_1 = oselm_step_k1(st_1, x[i], x[i])
+    np.testing.assert_allclose(st_k.beta, st_1.beta, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(st_k.p, st_1.p, rtol=1e-3, atol=1e-4)
+
+
+def test_oselm_p_symmetric_positive(slfn):
+    x = make_data(6)
+    st = init_oselm(slfn, x[:32], x[:32], activation="sigmoid")
+    st = oselm_train_sequential(st, x[32:], x[32:])
+    p = np.asarray(st.p)
+    np.testing.assert_allclose(p, p.T, atol=1e-4)
+    assert np.linalg.eigvalsh(p).min() > 0
+
+
+def test_forgetting_discounts_old_data(slfn):
+    """With λ<1 old data is down-weighted: after a long stream of pattern
+    B, a forgetting model reconstructs old pattern A worse than λ=1."""
+    a = make_data(7, rows=200)
+    b = make_data(8, rows=300) + 4.0
+    st_f = init_oselm(slfn, a[:32], a[:32], activation="sigmoid", forget=0.99)
+    st_n = init_oselm(slfn, a[:32], a[:32], activation="sigmoid", forget=1.0)
+    st_f = oselm_train_sequential(st_f, jnp.concatenate([a[32:], b]), jnp.concatenate([a[32:], b]))
+    st_n = oselm_train_sequential(st_n, jnp.concatenate([a[32:], b]), jnp.concatenate([a[32:], b]))
+    loss_f = float(oselm_loss(st_f, a[:64], a[:64]).mean())
+    loss_n = float(oselm_loss(st_n, a[:64], a[:64]).mean())
+    assert loss_f > loss_n  # forgot more of A
+
+
+# ---------------------------------------------------------- E²LM merge
+
+
+def test_merge_two_devices_equals_batch(slfn):
+    """§4.2: device-A merging device-B's (U,V) equals batch training on
+    the union of both datasets — the merged-model accuracy claim."""
+    x = make_data(10)
+    a, b = x[:128], x[128:]
+    st_a = init_oselm(slfn, a[:32], a[:32], activation="sigmoid")
+    st_a = oselm_train_sequential(st_a, a[32:], a[32:])
+    st_b = init_oselm(slfn, b[:32], b[:32], activation="sigmoid")
+    st_b = oselm_train_sequential(st_b, b[32:], b[32:])
+    merged = cooperative_update(st_a, to_uv(st_b))
+    elm = train_elm(slfn, x, x, activation="sigmoid")
+    np.testing.assert_allclose(merged.beta, elm.beta, rtol=1e-3, atol=1e-4)
+
+
+def test_merge_symmetry(slfn):
+    """A-merges-B and B-merges-A are identical (paper §5.2.1 note)."""
+    x = make_data(11)
+    a, b = x[:128], x[128:]
+    st_a = init_oselm(slfn, a[:32], a[:32], activation="sigmoid")
+    st_a = oselm_train_sequential(st_a, a[32:], a[32:])
+    st_b = init_oselm(slfn, b[:32], b[:32], activation="sigmoid")
+    st_b = oselm_train_sequential(st_b, b[32:], b[32:])
+    ab = cooperative_update(st_a, to_uv(st_b))
+    ba = cooperative_update(st_b, to_uv(st_a))
+    np.testing.assert_allclose(ab.beta, ba.beta, rtol=1e-3, atol=1e-4)
+
+
+def test_merge_then_continue_training(slfn):
+    """§4.2 step 6: after the merge, sequential training continues from
+    the merged (P, β) and stays consistent with full-batch ELM."""
+    x = make_data(12, rows=300)
+    a, b, c = x[:100], x[100:200], x[200:]
+    st_a = init_oselm(slfn, a[:32], a[:32], activation="sigmoid")
+    st_a = oselm_train_sequential(st_a, a[32:], a[32:])
+    st_b = init_oselm(slfn, b[:32], b[:32], activation="sigmoid")
+    st_b = oselm_train_sequential(st_b, b[32:], b[32:])
+    merged = cooperative_update(st_a, to_uv(st_b))
+    merged = oselm_train_sequential(merged, c, c)
+    elm = train_elm(slfn, x, x, activation="sigmoid")
+    np.testing.assert_allclose(merged.beta, elm.beta, rtol=1e-3, atol=2e-4)
+
+
+def test_uv_sub_removes_dataset(slfn):
+    """E²LM subtraction: (A∪B) − B == A."""
+    x = make_data(13)
+    a, b = x[:128], x[128:]
+    st_a = init_oselm(slfn, a[:32], a[:32], activation="sigmoid")
+    st_a = oselm_train_sequential(st_a, a[32:], a[32:])
+    st_b = init_oselm(slfn, b[:32], b[:32], activation="sigmoid")
+    st_b = oselm_train_sequential(st_b, b[32:], b[32:])
+    uv_ab = uv_add(to_uv(st_a), to_uv(st_b))
+    uv_a_rec = uv_sub(uv_ab, to_uv(st_b))
+    rec = from_uv(st_a, uv_a_rec)
+    np.testing.assert_allclose(rec.beta, st_a.beta, rtol=1e-2, atol=1e-3)
+
+
+def test_uv_replace(slfn):
+    x = make_data(14)
+    a, b = x[:128], x[128:]
+    st_a = init_oselm(slfn, a[:32], a[:32], activation="sigmoid")
+    st_b = init_oselm(slfn, b[:32], b[:32], activation="sigmoid")
+    uva, uvb = to_uv(st_a), to_uv(st_b)
+    total = uv_add(uva, uvb)
+    swapped = uv_replace(total, uva, uvb)  # now 2×B
+    np.testing.assert_allclose(swapped.u, 2 * uvb.u, rtol=1e-4, atol=1e-4)
+
+
+def test_uv_payload_size(slfn):
+    """Communication cost: the payload is Ñ(Ñ+m) floats, data-size
+    independent (the paper's communication-cost argument)."""
+    x = make_data(15)
+    st = init_oselm(slfn, x[:32], x[:32], activation="sigmoid")
+    uv = to_uv(st)
+    assert uv.nbytes == 4 * (12 * 12 + 12 * 24)
+
+
+# ------------------------------------------------------- autoencoder
+
+
+def test_autoencoder_detects_anomaly():
+    x = make_data(16, n=32)
+    ae = init_autoencoder(KEY, 32, 8, x[:64])
+    ae = ae_train_stream(ae, x[64:])
+    normal = float(ae_score(ae, x[:32]).mean())
+    anom = float(ae_score(ae, x[:32] + 6.0).mean())
+    assert anom > 5 * normal
+
+
+def test_autoencoder_requires_bottleneck():
+    x = make_data(17, n=16)
+    with pytest.raises(ValueError):
+        init_autoencoder(KEY, 16, 16, x[:32])
+
+
+def test_guarded_training_rejects_outliers():
+    x = make_data(18, n=32)
+    ae = init_autoencoder(KEY, 32, 8, x[:64])
+    ae = ae_train_stream(ae, x[64:])
+    thr = jnp.asarray(float(ae_score(ae, x[:64]).mean()) * 3.0)
+    _, acc_normal = ae_train_step_guarded(ae, x[0], thr)
+    _, acc_anom = ae_train_step_guarded(ae, x[0] + 8.0, thr)
+    assert bool(acc_normal) and not bool(acc_anom)
+
+
+def test_bank_min_score_and_instance_update():
+    xa = make_data(19, n=32)
+    xb = make_data(20, n=32) + 3.0
+    ae_a = init_autoencoder(jax.random.PRNGKey(1), 32, 8, xa[:64])
+    ae_a = ae_train_stream(ae_a, xa[64:])
+    ae_b = init_autoencoder(jax.random.PRNGKey(2), 32, 8, xb[:64])
+    ae_b = ae_train_stream(ae_b, xb[64:])
+    bank = make_bank([ae_a, ae_b])
+    # bank covers both patterns
+    assert float(bank_score(bank, xa[:16]).mean()) < 3.0
+    assert float(bank_score(bank, xb[:16]).mean()) < 3.0
+    bank2 = bank_train_instance(bank, 0, xa[0])
+    assert bank2.states.beta.shape == bank.states.beta.shape
+
+
+def test_oselm_predict_shapes(slfn):
+    x = make_data(21)
+    st = init_oselm(slfn, x[:32], x[:32], activation="identity")
+    y = oselm_predict(st, x[:7])
+    assert y.shape == (7, 24)
+    l = oselm_loss(st, x[:7], x[:7])
+    assert l.shape == (7,)

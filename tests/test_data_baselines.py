@@ -1,0 +1,138 @@
+"""Tests for the data substrate and the BP-NN / FedAvg baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import (
+    bpnn3_config,
+    bpnn5_config,
+    bpnn_score,
+    init_bpnn,
+    run_fedavg,
+    train_bpnn,
+)
+from repro.baselines.fedavg import FedAvgConfig, average_params
+from repro.data import (
+    make_dataset,
+    make_driving_dataset,
+    make_har_dataset,
+    make_mnist_like_dataset,
+)
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import (
+    anomaly_eval_arrays,
+    make_pattern_stream,
+    make_sharded_streams,
+    train_test_split,
+)
+
+
+def test_dataset_shapes_match_paper_table2():
+    d = make_driving_dataset(seed=0, samples_per_class=20)
+    assert d.n_features == 225 and d.n_classes == 3
+    h = make_har_dataset(seed=0, samples_per_class=20)
+    assert h.n_features == 561 and h.n_classes == 6
+    m = make_mnist_like_dataset(seed=0, samples_per_class=20)
+    assert m.n_features == 784 and m.n_classes == 10
+    assert m.x.min() >= 0.0 and m.x.max() <= 1.0  # paper: normalized /255
+
+
+def test_driving_patterns_distinguishable():
+    d = make_driving_dataset(seed=0, samples_per_class=50)
+    normal = d.pattern("normal")
+    aggr = d.pattern("aggressive")
+    # centroid distance dwarfs intra-class spread
+    dist = np.linalg.norm(normal.mean(0) - aggr.mean(0))
+    spread = np.linalg.norm(normal - normal.mean(0), axis=1).mean()
+    assert dist > 0.3 * spread
+
+
+def test_transition_tables_are_row_normalized():
+    d = make_driving_dataset(seed=1, samples_per_class=10)
+    tables = d.x.reshape(-1, 15, 15)
+    rows = tables.sum(axis=2)
+    assert ((np.abs(rows - 1.0) < 1e-5) | (rows == 0.0)).all()
+
+
+def test_split_and_eval_protocol():
+    h = make_har_dataset(seed=0, samples_per_class=50)
+    tr, te = train_test_split(h, 0.8, seed=0)
+    assert len(tr.x) == 6 * 40 and len(te.x) == 6 * 10
+    x, y = anomaly_eval_arrays(te, [0, 3], anomaly_ratio=0.1, seed=0)
+    n_norm = (y == 0).sum()
+    n_anom = (y == 1).sum()
+    assert n_anom == max(1, int(n_norm * 0.1))
+
+
+def test_pattern_stream_and_shards():
+    h = make_har_dataset(seed=0, samples_per_class=30)
+    s = make_pattern_stream(h, "laying", seed=0, limit=10)
+    assert s.shape == (10, 561)
+    sh = make_sharded_streams(h, 4, 20, seed=0)
+    assert sh.xs.shape == (4, 20, 561)
+    assert list(sh.pattern_of_shard) == [0, 1, 2, 3]
+
+
+def test_roc_auc_metric():
+    scores = np.array([0.1, 0.2, 0.3, 0.9, 0.8, 0.95])
+    labels = np.array([0, 0, 0, 1, 1, 1])
+    assert roc_auc(scores, labels) == 1.0
+    assert abs(roc_auc(-scores, labels)) < 1e-9
+    rng = np.random.default_rng(0)
+    s = rng.normal(size=2000)
+    l = rng.integers(0, 2, size=2000)
+    assert abs(roc_auc(s, l) - 0.5) < 0.05
+    # ties get half credit
+    assert roc_auc(np.zeros(10), np.array([0] * 5 + [1] * 5)) == 0.5
+
+
+def test_bpnn3_learns_and_detects():
+    h = make_har_dataset(seed=0, samples_per_class=60)
+    # normalize into (0,1) for the sigmoid output (paper standardizes HAR)
+    lo, hi = h.x.min(0), h.x.max(0)
+    xn = (h.x - lo) / (hi - lo + 1e-6)
+    normal = xn[h.y == 3]
+    cfg = bpnn3_config(561, 64, batch=8, epochs=5)
+    params = train_bpnn(jax.random.PRNGKey(0), cfg, jnp.asarray(normal))
+    s_norm = float(bpnn_score(params, cfg, jnp.asarray(normal[:32])).mean())
+    anom = xn[h.y == 5][:32]
+    s_anom = float(bpnn_score(params, cfg, jnp.asarray(anom)).mean())
+    assert s_anom > 1.5 * s_norm
+
+
+def test_bpnn5_shapes():
+    cfg = bpnn5_config(100, 32, 16, 32, batch=4, epochs=1)
+    params = init_bpnn(jax.random.PRNGKey(0), cfg)
+    assert [p["w"].shape for p in params] == [(100, 32), (32, 16), (16, 32), (32, 100)]
+    x = jax.random.uniform(jax.random.PRNGKey(1), (12, 100))
+    out = train_bpnn(jax.random.PRNGKey(2), cfg, x)
+    s = bpnn_score(out, cfg, x)
+    assert s.shape == (12,) and np.isfinite(np.asarray(s)).all()
+
+
+def test_average_params_is_mean():
+    a = [{"w": jnp.ones((2, 2)), "b": jnp.zeros(2)}]
+    b = [{"w": jnp.zeros((2, 2)), "b": jnp.ones(2) * 2}]
+    avg = average_params([a, b])
+    np.testing.assert_allclose(np.asarray(avg[0]["w"]), 0.5)
+    np.testing.assert_allclose(np.asarray(avg[0]["b"]), 1.0)
+
+
+def test_fedavg_two_clients_covers_both_patterns():
+    """BP-NN3-FL: after R rounds the global model reconstructs both
+    clients' patterns (the paper's FL baseline behavior)."""
+    h = make_har_dataset(seed=0, samples_per_class=60)
+    lo, hi = h.x.min(0), h.x.max(0)
+    xn = (h.x - lo) / (hi - lo + 1e-6)
+    c1 = jnp.asarray(xn[h.y == 3][:48])
+    c2 = jnp.asarray(xn[h.y == 5][:48])
+    cfg = bpnn3_config(561, 64, batch=8, epochs=1)
+    params = run_fedavg(
+        jax.random.PRNGKey(0), cfg, [c1, c2], FedAvgConfig(rounds=8, local_epochs=1)
+    )
+    s1 = float(bpnn_score(params, cfg, c1).mean())
+    s2 = float(bpnn_score(params, cfg, c2).mean())
+    anom = jnp.asarray(xn[h.y == 0][:32])
+    sa = float(bpnn_score(params, cfg, anom).mean())
+    assert sa > s1 and sa > s2

@@ -1,0 +1,192 @@
+"""Tests for sharding rules, optimizers, checkpointing, and the mesh
+federation (subprocess with 8 host devices)."""
+import json
+import os
+import subprocess
+import sys
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.launch.sharding import param_specs, spec_for_leaf
+from repro.optim import adam, clip_by_global_norm, sgd
+
+
+class FakeMesh:
+    """Just enough mesh surface for spec computation."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = SimpleNamespace(shape=shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def test_spec_divisible_dims_shard():
+    assert spec_for_leaf("wq", (16384, 16384), MESH) == P("data", "model")
+    assert spec_for_leaf("down", (53248, 16384), MESH) == P("model", "data")
+    assert spec_for_leaf("embed", (128256, 16384), MESH) == P("model", "data")
+
+
+def test_spec_indivisible_dims_replicate():
+    # hymba vocab 32001 is not divisible by 16 → replicated dim
+    assert spec_for_leaf("embed", (32001, 1600), MESH) == P(None, "data")
+    # granite-moe 40 experts not divisible by 16 → per-expert d_ff takes
+    # the "model" axis instead (§Perf iteration 3.3 — otherwise every
+    # model-axis device recomputes identical expert work)
+    assert spec_for_leaf("w_gate", (40, 1536, 512), MESH) == P(None, "data", "model")
+    assert spec_for_leaf("w_down", (40, 512, 1536), MESH) == P(None, "model", "data")
+    # arctic 128 experts divisible
+    assert spec_for_leaf("w_gate", (128, 7168, 4864), MESH) == P("model", "data", None)
+
+
+def test_spec_layer_stacked_leading_none():
+    # stacked layers get a leading None
+    assert spec_for_leaf("wq", (126, 16384, 16384), MESH) == P(None, "data", "model")
+
+
+def test_spec_unknown_name_replicates():
+    assert spec_for_leaf("mystery", (64, 64), MESH) == P()
+    assert spec_for_leaf("gate", (), MESH) == P()  # VLM scalar gate
+
+
+def test_param_specs_tree():
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config("gemma3-1b")
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(shapes, MESH)
+    # embed: 262144 % 16 == 0 → model; 1152 % 16 == 0 → data
+    assert specs["embed"] == P("model", "data")
+    assert specs["final_norm"] == P()
+    swa = specs["layers"]["swa"]
+    assert swa["attn"]["wq"] == P(None, "data", "model")
+
+
+# ------------------------------------------------------------- optimizers
+
+
+def test_adam_converges_quadratic():
+    opt = adam(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adam_bf16_moments():
+    opt = adam(1e-3, moment_dtype=jnp.bfloat16)
+    params = {"w": jnp.ones((4, 4))}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((4, 4))}
+    params2, state2 = opt.update(g, state, params)
+    assert state2.mu["w"].dtype == jnp.bfloat16
+    assert float(params2["w"][0, 0]) < 1.0
+
+
+def test_sgd_momentum():
+    opt = sgd(0.1, momentum=0.9)
+    params = jnp.asarray(4.0)
+    state = opt.init(params)
+    for _ in range(100):
+        params, state = opt.update(jax.grad(lambda w: w**2)(params), state, params)
+    assert abs(float(params)) < 5e-2
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0, "b": jnp.ones(2) * 10.0}
+    clipped = clip_by_global_norm(g, 1.0)
+    norm = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(norm), 1.0, rtol=1e-5)
+    small = {"a": jnp.ones(2) * 0.1}
+    same = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), 0.1, rtol=1e-4)
+
+
+# ------------------------------------------------------------ checkpoints
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones(4, jnp.bfloat16)},
+            "lst": [jnp.zeros(2), jnp.full((1,), 7.0)]}
+    save_pytree(tree, tmp_path / "x.npz")
+    back = load_pytree(tree, tmp_path / "x.npz")
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_allclose(
+            np.asarray(x, dtype=np.float32), np.asarray(y, dtype=np.float32)
+        )
+
+
+def test_checkpoint_manager_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    tree = {"w": jnp.ones(3)}
+    for step in (10, 20, 30):
+        mgr.save(step, tree)
+    assert mgr.latest_step() == 30
+    files = sorted(p.name for p in tmp_path.glob("ckpt_*.npz"))
+    assert len(files) == 2  # keep-last-2
+    restored, step = mgr.restore(tree)
+    assert step == 30
+    np.testing.assert_allclose(np.asarray(restored["w"]), 1.0)
+
+
+def test_checkpoint_oselm_state(tmp_path):
+    from repro.core import init_oselm, init_slfn, oselm_predict
+
+    params = init_slfn(jax.random.PRNGKey(0), 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    st = init_oselm(params, x, x, activation="sigmoid", ridge=1e-3)
+    save_pytree(st, tmp_path / "det.npz")
+    back = load_pytree(st, tmp_path / "det.npz")
+    np.testing.assert_allclose(
+        np.asarray(oselm_predict(st, x[:4])), np.asarray(oselm_predict(back, x[:4])),
+        rtol=1e-6,
+    )
+
+
+# --------------------------------------------- mesh federation, 8 devices
+
+_SUBPROC_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import init_oselm, init_slfn, oselm_train_sequential, to_uv, cooperative_update
+from repro.federated import mesh_cooperative_update
+mesh = jax.make_mesh((8,), ("data",))
+params = init_slfn(jax.random.PRNGKey(0), 24, 12)
+states, xs = [], []
+for s in range(8):
+    x = jax.random.normal(jax.random.PRNGKey(s + 1), (64, 24))
+    st = init_oselm(params, x[:32], x[:32], activation="sigmoid", ridge=1e-4)
+    st = oselm_train_sequential(st, x[32:], x[32:])
+    states.append(st); xs.append(x)
+stacked = jax.tree.map(lambda *a: jnp.stack(a), *states)
+merged = mesh_cooperative_update(stacked, mesh, ("data",), ridge=1e-4)
+ref = cooperative_update(states[0], *[to_uv(s) for s in states[1:]])
+diff = float(jnp.max(jnp.abs(merged.beta[0] - ref.beta)))
+identical = bool(jnp.allclose(merged.beta[0], merged.beta[7], atol=1e-5))
+print("RESULT", diff, identical)
+assert diff < 2e-2 and identical
+"""
+
+
+@pytest.mark.slow
+def test_mesh_federation_subprocess():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SUBPROC_SCRIPT], env=env, cwd=os.path.dirname(os.path.dirname(__file__)),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RESULT" in out.stdout

@@ -1,0 +1,108 @@
+"""Tests for the federated protocol layer (client/server + selection)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ae_score, init_slfn, to_uv
+from repro.data import make_har_dataset
+from repro.data.pipeline import make_pattern_stream
+from repro.federated import EdgeDevice, FederationServer
+from repro.federated.protocol import Payload, cooperative_round
+from repro.federated.selection import (
+    all_clients,
+    loss_threshold_selection,
+    resource_constrained_selection,
+)
+
+
+@pytest.fixture(scope="module")
+def har():
+    return make_har_dataset(seed=0, samples_per_class=120)
+
+
+def make_device(har, device_id, pattern, key, n_hidden=48):
+    xs = make_pattern_stream(har, pattern, seed=7)
+    dev = EdgeDevice(device_id, key, har.n_features, n_hidden, xs[: 2 * n_hidden], ridge=1e-3)
+    dev.train(xs[2 * n_hidden :])
+    return dev
+
+
+def test_paper_scenario_device_b_normal_becomes_normal_at_a(har):
+    """§5.2 scenario: after A merges B, B's pattern reconstructs on A."""
+    key = jax.random.PRNGKey(0)
+    dev_a = make_device(har, "A", "sitting", key)
+    dev_b = make_device(har, "B", "laying", key)
+    laying = har.pattern("laying")[:64]
+
+    before = dev_a.score(laying).mean()
+    server = FederationServer()
+    dev_b.share(server)
+    dev_a.merge_from(server, ["B"])
+    after = dev_a.score(laying).mean()
+    assert after < before / 5.0  # loss collapses (paper Fig. 7)
+
+
+def test_merge_symmetry_between_devices(har):
+    """'Device-A that has merged Device-B' == 'Device-B that has merged
+    Device-A' (§5.2.1)."""
+    key = jax.random.PRNGKey(0)
+    dev_a = make_device(har, "A", "sitting", key)
+    dev_b = make_device(har, "B", "laying", key)
+    server = FederationServer()
+    cooperative_round([dev_a, dev_b], server)
+    np.testing.assert_allclose(
+        np.asarray(dev_a.state.beta), np.asarray(dev_b.state.beta), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_comm_cost_independent_of_data_size(har):
+    """The payload is Ñ(Ñ+m) floats no matter how many samples trained."""
+    key = jax.random.PRNGKey(0)
+    small = make_device(har, "S", "walking", key)
+    big = make_device(har, "B", "walking", key)
+    big.train(make_pattern_stream(har, "standing", seed=11))
+    server = FederationServer()
+    small.share(server)
+    big.share(server)
+    assert server.store["S"].nbytes == server.store["B"].nbytes
+    assert server.log.uploads == 2
+
+
+def test_payload_roundtrip(har):
+    key = jax.random.PRNGKey(1)
+    dev = make_device(har, "X", "walking", key)
+    uv = to_uv(dev.state)
+    p = Payload.from_uv("X", uv, 3)
+    rt = p.to_uv()
+    np.testing.assert_allclose(np.asarray(rt.u), np.asarray(uv.u))
+    assert p.version == 3
+
+
+def test_selection_strategies():
+    ids = ["a", "b", "c"]
+    assert list(all_clients(ids)) == ids
+    sel = resource_constrained_selection({"a": 1.0, "b": 10.0, "c": 2.0}, threshold=5.0)
+    assert list(sel(ids)) == ["a", "c"]
+    sel2 = loss_threshold_selection({"a": 0.1, "b": 9.0}, max_loss=1.0)
+    assert list(sel2(ids)) == ["a"]  # unknown c excluded too
+
+
+def test_selective_round_excludes_bad_client(har):
+    """Ref [20]-style: a device trained on garbage is excluded from the
+    merge, so it does not poison the others."""
+    key = jax.random.PRNGKey(0)
+    dev_a = make_device(har, "A", "sitting", key)
+    dev_b = make_device(har, "B", "laying", key)
+    dev_c = make_device(har, "C", "walking", key)
+    # poison C
+    rng = np.random.default_rng(0)
+    dev_c.train(rng.normal(size=(200, har.n_features)).astype(np.float32) * 50.0)
+
+    server = FederationServer()
+    sel = loss_threshold_selection({"A": 0.1, "B": 0.1, "C": 99.0}, max_loss=1.0)
+    cooperative_round([dev_a, dev_b, dev_c], server, select=sel)
+    sitting = har.pattern("sitting")[:64]
+    laying = har.pattern("laying")[:64]
+    assert dev_a.score(sitting).mean() < 1.0
+    assert dev_a.score(laying).mean() < 1.0

@@ -1,0 +1,193 @@
+"""Per-kernel correctness: sweep shapes/dtypes, assert allclose vs the
+ref.py pure-jnp oracles (kernels run interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import init_oselm, init_slfn, oselm_step_k1
+from repro.kernels import (
+    hidden_proj,
+    matmul_atb,
+    oselm_step_k1_kernel,
+    rank1_add,
+    uv_accum,
+)
+from repro.kernels.ref import (
+    atb_ref,
+    hidden_proj_ref,
+    oselm_step_k1_ref,
+    rank1_add_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape)
+    return x.astype(dtype)
+
+
+SHAPES_MM = [
+    (8, 16, 8),        # tiny, heavy padding
+    (64, 64, 64),
+    (128, 128, 128),   # exactly one tile
+    (200, 150, 100),   # ragged
+    (256, 384, 128),   # multi-tile
+    (33, 257, 129),    # off-by-one everywhere
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("act", ["sigmoid", "identity", "relu"])
+def test_hidden_proj_matches_ref(m, k, n, dtype, act):
+    x = rnd(1, (m, k), dtype)
+    a = rnd(2, (k, n), dtype)
+    b = rnd(3, (n,), dtype)
+    got = hidden_proj(x, a, b, activation=act, interpret=True)
+    want = hidden_proj_ref(x, a, b, act)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("k,n1,n2", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_matmul_atb_matches_ref(k, n1, n2, dtype):
+    a = rnd(4, (k, n1), dtype)
+    b = rnd(5, (k, n2), dtype)
+    got = matmul_atb(a, b, interpret=True)
+    want = atb_ref(a, b)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("k,n", [(50, 40), (128, 128), (300, 64), (64, 300)])
+def test_uv_accum_is_spd_and_matches(k, n):
+    h = rnd(6, (k, n), jnp.float32)
+    t = rnd(7, (k, 24), jnp.float32)
+    u, v = uv_accum(h, t, interpret=True)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(atb_ref(h, h)), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(atb_ref(h, t)), rtol=1e-4, atol=1e-4)
+    w = np.linalg.eigvalsh(np.asarray(u))
+    assert w.min() > -1e-3  # PSD up to roundoff
+
+
+@pytest.mark.parametrize("n1,n2", [(16, 16), (128, 128), (100, 60), (257, 129), (8, 512)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rank1_add_matches_ref(n1, n2, dtype):
+    x = rnd(8, (n1, n2), dtype)
+    u = rnd(9, (n1,), dtype)
+    v = rnd(10, (n2,), dtype)
+    got = rank1_add(x, u, v, -0.37, interpret=True)
+    want = rank1_add_ref(x, u, v, -0.37)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,nh,m", [(24, 12, 24), (100, 40, 100), (561, 128, 561)])
+def test_oselm_step_kernel_vs_math_ref(n, nh, m):
+    """Fused kernel step == ref.py closed form == core.oselm step."""
+    params = init_slfn(KEY, n, nh)
+    x0 = rnd(11, (2 * nh, n), jnp.float32)
+    st = init_oselm(params, x0, x0, activation="sigmoid", ridge=1e-4)
+    x = rnd(12, (n,), jnp.float32)
+
+    got = oselm_step_k1_kernel(st, x, x, interpret=True)
+    want = oselm_step_k1(st, x, x)
+    np.testing.assert_allclose(np.asarray(got.p), np.asarray(want.p), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.beta), np.asarray(want.beta), rtol=1e-3, atol=1e-4)
+
+    # and against the standalone closed-form oracle
+    from repro.core.elm import hidden as hidden_fn
+    h = hidden_fn(params, x[None, :], "sigmoid")[0]
+    p_ref, b_ref = oselm_step_k1_ref(st.p, st.beta, h, x)
+    np.testing.assert_allclose(np.asarray(got.p), np.asarray(p_ref), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got.beta), np.asarray(b_ref), rtol=1e-3, atol=1e-4)
+
+
+def test_kernel_blockspec_tile_variants():
+    """Same result across block shapes (tiling must not change math)."""
+    x = rnd(13, (70, 90), jnp.float32)
+    a = rnd(14, (90, 50), jnp.float32)
+    b = rnd(15, (50,), jnp.float32)
+    base = hidden_proj(x, a, b, activation="tanh", interpret=True)
+    for bm, bn, bk in [(8, 128, 128), (128, 256, 8), (16, 128, 32)]:
+        alt = hidden_proj(x, a, b, activation="tanh", bm=bm, bn=bn, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(alt), np.asarray(base), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- flash attention
+
+
+@pytest.mark.parametrize("s,cq,ck,causal", [
+    (64, 32, 32, True), (128, 128, 128, True),
+    (200, 64, 128, False), (96, 128, 32, True), (33, 16, 16, True),
+])
+def test_flash_attention_matches_blockwise(s, cq, ck, causal):
+    from repro.kernels.flash_attn import flash_attention
+    from repro.models.layers import blockwise_attention_fwd_only
+
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    q = jax.random.normal(ks[0], (2, s, 3, 64))
+    k = jax.random.normal(ks[1], (2, s, 3, 64))
+    v = jax.random.normal(ks[2], (2, s, 3, 64))
+    got = flash_attention(q, k, v, causal=causal, cq=cq, ck=ck, interpret=True)
+    want = blockwise_attention_fwd_only(q, k, v, causal=causal, chunk=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attn import flash_attention
+    from repro.models.layers import blockwise_attention_fwd_only
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32)).astype(dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = blockwise_attention_fwd_only(q, k, v, causal=True, chunk=128)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+# ----------------------------------------------------------- GLA kernel
+
+
+@pytest.mark.parametrize("s,chunk", [(64, 32), (128, 128), (100, 32), (256, 64), (33, 16)])
+def test_gla_kernel_matches_engine(s, chunk):
+    from repro.kernels.gla_scan import gla_forward
+    from repro.models.ssm import chunked_linear_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(s), 4)
+    q = jax.random.normal(ks[0], (2, s, 3, 16))
+    k = jax.random.normal(ks[1], (2, s, 3, 16))
+    v = jax.random.normal(ks[2], (2, s, 3, 8))
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (2, s, 3)))
+    got = gla_forward(q, k, v, la, chunk=chunk, interpret=True)
+    want, _ = chunked_linear_attention(q, k, v, la, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gla_kernel_dtypes(dtype):
+    from repro.kernels.gla_scan import gla_forward
+    from repro.models.ssm import chunked_linear_attention
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (1, 64, 2, 8)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 64, 2, 8)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 64, 2, 8)).astype(dtype)
+    la = -jax.nn.softplus(jax.random.normal(ks[3], (1, 64, 2)))
+    got = gla_forward(q, k, v, la, chunk=32, interpret=True)
+    want, _ = chunked_linear_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32), la, chunk=32
+    )
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )

@@ -1,0 +1,205 @@
+"""Extra model-substrate tests: attention equivalences, MoE dispatch
+parity, GLA engine properties, loss chunking invariance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import (
+    blockwise_attention,
+    blockwise_attention_fwd_only,
+    local_attention,
+    rope_tables,
+    apply_rope,
+)
+from repro.models.moe import moe_ffn
+from repro.models.ssm import chunked_linear_attention, linear_attention_decode_step
+
+
+def _naive_attn(q, k, v, causal=True, window=0):
+    b, s, h, hd = q.shape
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+    qs = jnp.arange(s)[:, None]
+    ks = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        m = m & (ks <= qs)
+    if window:
+        m = m & (qs - ks < window)
+    sc = jnp.where(m[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=8, max_value=160),
+    st.integers(min_value=8, max_value=96),
+    st.booleans(),
+)
+def test_blockwise_attention_property(s, chunk, causal):
+    ks = jax.random.split(jax.random.PRNGKey(s * 7 + chunk), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16))
+    k = jax.random.normal(ks[1], (1, s, 2, 16))
+    v = jax.random.normal(ks[2], (1, s, 2, 16))
+    out = blockwise_attention(q, k, v, causal=causal, chunk=chunk)
+    ref = _naive_attn(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=16, max_value=160),
+    st.integers(min_value=4, max_value=64),
+)
+def test_local_attention_property(s, w):
+    ks = jax.random.split(jax.random.PRNGKey(s * 13 + w), 3)
+    q = jax.random.normal(ks[0], (1, s, 2, 16))
+    k = jax.random.normal(ks[1], (1, s, 2, 16))
+    v = jax.random.normal(ks[2], (1, s, 2, 16))
+    out = local_attention(q, k, v, window=w)
+    ref = _naive_attn(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-5)
+
+
+def test_flash_vjp_matches_fwd_only():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 96, 2, 32))
+    k = jax.random.normal(ks[1], (2, 96, 2, 32))
+    v = jax.random.normal(ks[2], (2, 96, 2, 32))
+    a = blockwise_attention(q, k, v, chunk=32)
+    b = blockwise_attention_fwd_only(q, k, v, chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_flash_grad_vs_naive():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, 80, 2, 16))
+    k = jax.random.normal(ks[1], (1, 80, 2, 16))
+    v = jax.random.normal(ks[2], (1, 80, 2, 16))
+    g1 = jax.grad(lambda q, k, v: jnp.sum(jnp.tanh(
+        blockwise_attention(q, k, v, chunk=32))), argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda q, k, v: jnp.sum(jnp.tanh(
+        _naive_attn(q, k, v))), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: ⟨q_m, k_n⟩ depends only on m − n."""
+    cos, sin = rope_tables(32, 16, 10000.0)
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+
+    def dot_at(m, n):
+        qm = apply_rope(q, cos[m:m + 1], sin[m:m + 1])
+        kn = apply_rope(k, cos[n:n + 1], sin[n:n + 1])
+        return float(jnp.sum(qm * kn))
+
+    assert abs(dot_at(5, 2) - dot_at(13, 10)) < 1e-4
+    assert abs(dot_at(0, 0) - dot_at(20, 20)) < 1e-4
+
+
+# ---------------------------------------------------------------- MoE
+
+
+def _moe_params(key, d=32, e=8, f=16):
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (d, e)) * 0.1,
+        "w_gate": jax.random.normal(ks[1], (e, d, f)) * 0.1,
+        "w_up": jax.random.normal(ks[2], (e, d, f)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (e, f, d)) * 0.1,
+    }
+
+
+def test_moe_dispatch_parity():
+    """scatter and einsum dispatch implement identical capacity routing."""
+    p = _moe_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y1, a1 = moe_ffn(p, x, n_experts=8, top_k=2, tokens_per_group=32, dispatch="einsum")
+    y2, a2 = moe_ffn(p, x, n_experts=8, top_k=2, tokens_per_group=32, dispatch="scatter")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(a1["lb_loss"]), float(a2["lb_loss"]), rtol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity_factor ≪ 1 tokens get dropped and the output shrinks."""
+    p = _moe_params(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+    _, a_small = moe_ffn(p, x, n_experts=8, top_k=2, tokens_per_group=64,
+                         capacity_factor=0.25, dispatch="einsum")
+    _, a_big = moe_ffn(p, x, n_experts=8, top_k=2, tokens_per_group=64,
+                       capacity_factor=4.0, dispatch="einsum")
+    assert float(a_small["dropped_frac"]) > 0.0
+    assert float(a_big["dropped_frac"]) == 0.0
+
+
+def test_moe_lb_loss_penalizes_imbalance():
+    p = _moe_params(jax.random.PRNGKey(0))
+    # collapse routing to expert 0
+    p_collapsed = dict(p, router=p["router"] * 0.0 + jnp.eye(32, 8) * 50.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+    _, a_bal = moe_ffn(p, x, n_experts=8, top_k=2, tokens_per_group=64)
+    _, a_col = moe_ffn(p_collapsed, x, n_experts=8, top_k=2, tokens_per_group=64)
+    assert float(a_col["lb_loss"]) > float(a_bal["lb_loss"])
+
+
+# ------------------------------------------------------------- GLA engine
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=80),
+    st.integers(min_value=2, max_value=40),
+)
+def test_gla_chunk_invariance(s, chunk):
+    """Same result for every chunk size (the chunked factorization is
+    exact, not an approximation)."""
+    ks = jax.random.split(jax.random.PRNGKey(s * 31 + chunk), 4)
+    q = jax.random.normal(ks[0], (1, s, 2, 8))
+    k = jax.random.normal(ks[1], (1, s, 2, 8))
+    v = jax.random.normal(ks[2], (1, s, 2, 8))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (1, s, 2)))
+    y1, s1 = chunked_linear_attention(q, k, v, log_a, chunk=chunk)
+    y2, s2 = chunked_linear_attention(q, k, v, log_a, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-5)
+
+
+def test_gla_decode_continues_prefill():
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    s0 = 40
+    q = jax.random.normal(ks[0], (1, s0 + 3, 2, 8))
+    k = jax.random.normal(ks[1], (1, s0 + 3, 2, 8))
+    v = jax.random.normal(ks[2], (1, s0 + 3, 2, 8))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (1, s0 + 3, 2)))
+    y_full, _ = chunked_linear_attention(q, k, v, log_a, chunk=16)
+    _, state = chunked_linear_attention(
+        q[:, :s0], k[:, :s0], v[:, :s0], log_a[:, :s0], chunk=16
+    )
+    for t in range(s0, s0 + 3):
+        state, y_t = linear_attention_decode_step(
+            state, q[:, t], k[:, t], v[:, t], log_a[:, t]
+        )
+    np.testing.assert_allclose(
+        np.asarray(y_t), np.asarray(y_full[:, -1]), rtol=1e-4, atol=1e-5
+    )
+
+
+# ------------------------------------------------------------ loss chunking
+
+
+def test_lm_loss_chunk_invariance():
+    from repro.configs import get_config
+    from repro.models import init_params, lm_loss
+
+    cfg = get_config("granite-3-2b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)
+    l1, _ = lm_loss(params, cfg, tokens, tokens, loss_chunk=16)
+    l2, _ = lm_loss(params, cfg, tokens, tokens, loss_chunk=64)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

@@ -1,0 +1,130 @@
+"""Property-based tests (hypothesis) for the system's invariants.
+
+The merge algebra (Eq. 8) is the load-bearing invariant of the whole
+framework — associativity/commutativity is what legalizes running the
+paper's cooperative update as a psum all-reduce on a TPU mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    UV,
+    cooperative_update,
+    init_oselm,
+    init_slfn,
+    oselm_step,
+    oselm_train_sequential,
+    to_uv,
+    train_elm,
+    uv_add,
+    uv_sub,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.tuples(
+    st.integers(min_value=4, max_value=24),   # n features
+    st.integers(min_value=2, max_value=12),   # hidden
+    st.integers(min_value=40, max_value=96),  # rows
+    st.integers(min_value=0, max_value=2**31 - 1),
+)
+
+
+def _mk(n, nh, rows, seed):
+    params = init_slfn(jax.random.PRNGKey(seed), n, max(2, min(nh, n - 1)))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (rows, n))
+    return params, x
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims)
+def test_sequential_equals_batch(d):
+    """∀ shapes/seeds: OS-ELM streaming == batch ELM (Eq. 12 ≡ Eq. 5)."""
+    n, nh, rows, seed = d
+    params, x = _mk(n, nh, rows, seed)
+    init_rows = max(2 * params.n_hidden, 8)
+    st_ = init_oselm(params, x[:init_rows], x[:init_rows], activation="sigmoid", ridge=1e-4)
+    st_ = oselm_train_sequential(st_, x[init_rows:], x[init_rows:])
+    elm = train_elm(params, x, x, activation="sigmoid", ridge=1e-4)
+    np.testing.assert_allclose(st_.beta, elm.beta, rtol=5e-2, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims)
+def test_merge_commutative_associative(d):
+    """UV algebra is commutative/associative (exactly, up to f32 add)."""
+    n, nh, rows, seed = d
+    params, x = _mk(n, nh, rows, seed)
+    third = rows // 3
+    init_rows = max(2 * params.n_hidden, 4)
+    parts = []
+    for i in range(3):
+        seg = x[i * third:(i + 1) * third]
+        if seg.shape[0] < init_rows:
+            return
+        stt = init_oselm(params, seg, seg, activation="sigmoid", ridge=1e-4)
+        parts.append(to_uv(stt))
+    ab_c = uv_add(uv_add(parts[0], parts[1]), parts[2])
+    a_bc = uv_add(parts[0], uv_add(parts[1], parts[2]))
+    ba_c = uv_add(uv_add(parts[1], parts[0]), parts[2])
+    np.testing.assert_allclose(ab_c.u, a_bc.u, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(ab_c.v, ba_c.v, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims)
+def test_add_sub_roundtrip(d):
+    n, nh, rows, seed = d
+    params, x = _mk(n, nh, rows, seed)
+    half = rows // 2
+    init_rows = max(2 * params.n_hidden, 4)
+    if half < init_rows:
+        return
+    st_a = init_oselm(params, x[:half], x[:half], activation="identity", ridge=1e-4)
+    st_b = init_oselm(params, x[half:], x[half:], activation="identity", ridge=1e-4)
+    uva, uvb = to_uv(st_a), to_uv(st_b)
+    rt = uv_sub(uv_add(uva, uvb), uvb)
+    np.testing.assert_allclose(rt.u, uva.u, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(rt.v, uva.v, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims, st.integers(min_value=2, max_value=6))
+def test_nway_merge_equals_batch(d, nparts):
+    """N-device one-shot merge == batch over the union, ∀ N — the psum
+    legalization property."""
+    n, nh, rows, seed = d
+    params, x = _mk(n, nh, rows * nparts, seed)
+    init_rows = max(2 * params.n_hidden, 4)
+    if rows < init_rows:
+        return
+    states = []
+    for i in range(nparts):
+        seg = x[i * rows:(i + 1) * rows]
+        stt = init_oselm(params, seg[:init_rows], seg[:init_rows], activation="sigmoid", ridge=1e-4)
+        stt = oselm_train_sequential(stt, seg[init_rows:], seg[init_rows:])
+        states.append(stt)
+    merged = cooperative_update(states[0], *[to_uv(s) for s in states[1:]])
+    elm = train_elm(params, x, x, activation="sigmoid", ridge=nparts * 1e-4)
+    np.testing.assert_allclose(merged.beta, elm.beta, rtol=5e-2, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dims, st.integers(min_value=1, max_value=8))
+def test_batchk_equals_k1(d, k):
+    """Eq. 12 with batch k == k applications of the k=1 fast path."""
+    n, nh, rows, seed = d
+    params, x = _mk(n, nh, rows, seed)
+    init_rows = max(2 * params.n_hidden, 8)
+    if rows < init_rows + k:
+        return
+    st0 = init_oselm(params, x[:init_rows], x[:init_rows], activation="tanh", ridge=1e-4)
+    chunk = x[init_rows:init_rows + k]
+    st_k = oselm_step(st0, chunk, chunk)
+    st_1 = st0
+    for i in range(k):
+        from repro.core import oselm_step_k1
+        st_1 = oselm_step_k1(st_1, chunk[i], chunk[i])
+    np.testing.assert_allclose(st_k.beta, st_1.beta, rtol=5e-2, atol=5e-3)
