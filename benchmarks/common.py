@@ -10,7 +10,7 @@ import numpy as np
 from repro.configs.oselm_edge import EDGE_CONFIGS, EdgeConfig
 from repro.core import OSELMState, ae_train_stream, init_autoencoder
 from repro.data import make_dataset
-from repro.data.pipeline import make_pattern_stream, train_test_split
+from repro.data.pipeline import make_pattern_stream
 
 
 def timed(fn, *args, warmup: int = 2, iters: int = 10) -> float:

@@ -8,9 +8,8 @@ HAR dataset (sitting vs laying), plus BP-NN3 reference bars.
 from __future__ import annotations
 
 import jax
-import numpy as np
 
-from benchmarks.common import edge_config, normalized_dataset, train_edge_device, timed
+from benchmarks.common import edge_config, normalized_dataset, train_edge_device
 from repro.core import ae_score, cooperative_update, to_uv
 from repro.data.pipeline import train_test_split
 

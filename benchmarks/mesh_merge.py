@@ -17,7 +17,6 @@ import numpy as np
 
 from benchmarks.common import edge_config, normalized_dataset, timed
 from repro.core import (
-    OSELMState,
     cooperative_update,
     init_oselm,
     init_slfn,

@@ -19,6 +19,7 @@ BENCHES = [
     ("latency", "paper Table 4 — train/predict/merge latencies"),
     ("convergence", "paper Fig. 18 — merge vs sequential training"),
     ("mesh_merge", "ours — psum cooperative update on a device mesh"),
+    ("fleet_scale", "ours — fleet simulator: devices × topology grid"),
     ("kernel_bench", "ours — Pallas kernel micro-bench (interpret)"),
     ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),
     ("roofline_report", "ours — dry-run roofline artifact summary"),

@@ -9,7 +9,6 @@ devices now recognize both patterns. Finishes with the ROC-AUC lift.
 import jax
 import numpy as np
 
-from repro.core import ae_score
 from repro.data import make_har_dataset
 from repro.data.metrics import roc_auc
 from repro.data.pipeline import anomaly_eval_arrays, make_pattern_stream, train_test_split

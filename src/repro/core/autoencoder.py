@@ -14,7 +14,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.elm import SLFNParams, init_slfn
+from repro.core.elm import init_slfn
 from repro.core.oselm import (
     OSELMState,
     init_oselm,

@@ -17,7 +17,6 @@ Each mesh shard:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Sequence
 
 import jax
@@ -36,6 +35,13 @@ except ImportError:  # pragma: no cover - older jax
         return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 from repro.core import UV, OSELMState, from_uv, oselm_step_k1, to_uv
+
+# jax >= 0.6 gives shard_map manual-axes varying types: psum outputs are
+# device-invariant and must be re-varied (pvary) before re-entering a
+# scan carry that was device-varying. Older jax (<= 0.4.x) has neither
+# jax.typeof nor jax.lax.pvary — and doesn't track varying manual axes,
+# so the re-vary is a no-op there.
+_HAS_VARYING_TYPES = hasattr(jax, "typeof") and hasattr(jax.lax, "pvary")
 
 
 def _stack_spec(axes: Sequence[str]) -> P:
@@ -121,9 +127,12 @@ def mesh_federated_train(
                 s2 = merge(local_train(s, chunk))
                 # psum outputs are device-invariant; the scan carry entered
                 # as device-varying — restore the varying type (pvary is
-                # psum's dual under shard_map's manual-axes typing)
+                # psum's dual under shard_map's manual-axes typing). On
+                # jax without varying-type tracking this reduces to a cast.
                 def _revary(n, o):
                     n = jnp.asarray(n, o.dtype)
+                    if not _HAS_VARYING_TYPES:
+                        return n
                     missing = tuple(a for a in axes if a not in jax.typeof(n).vma)
                     return jax.lax.pvary(n, missing) if missing else n
 

@@ -1,0 +1,58 @@
+"""repro.fleet — fleet-scale federation simulator.
+
+Simulates hundreds-to-thousands of virtual OS-ELM edge devices in one
+process as a single stacked pytree (``vmap`` over devices, ``scan``
+over streams), with topology-aware cooperative updates (all-to-all /
+star / ring gossip / hierarchical clusters), an async-staleness model
+for repeated synchronization under realistic payload lag, a non-IID
+stream partitioner with drift injection, and per-round communication
+accounting.
+
+This is the substrate for the ROADMAP's scaling line: sharded fleets
+over mesh axes, Pallas segment-sum merge kernels, and serve-loop
+integration all build on the stacked-(U, V) layout defined here.
+"""
+from repro.fleet.comm import (
+    RoundCost,
+    fedavg_total_cost,
+    model_nbytes,
+    payload_nbytes,
+    topology_round_cost,
+)
+from repro.fleet.fleet import (
+    device_state,
+    fleet_from_uv,
+    fleet_merge,
+    fleet_score,
+    fleet_to_uv,
+    fleet_train,
+    fleet_train_rounds,
+    init_fleet,
+)
+from repro.fleet.partition import (
+    DriftEvent,
+    FleetStreams,
+    make_fleet_streams,
+    random_drift_schedule,
+)
+from repro.fleet.staleness import StalenessSchedule, fleet_train_async
+from repro.fleet.topology import (
+    TOPOLOGIES,
+    Topology,
+    all_to_all,
+    hierarchical,
+    make_topology,
+    ring,
+    star,
+)
+
+__all__ = [
+    "RoundCost", "fedavg_total_cost", "model_nbytes", "payload_nbytes",
+    "topology_round_cost",
+    "device_state", "fleet_from_uv", "fleet_merge", "fleet_score",
+    "fleet_to_uv", "fleet_train", "fleet_train_rounds", "init_fleet",
+    "DriftEvent", "FleetStreams", "make_fleet_streams", "random_drift_schedule",
+    "StalenessSchedule", "fleet_train_async",
+    "TOPOLOGIES", "Topology", "all_to_all", "hierarchical", "make_topology",
+    "ring", "star",
+]

@@ -1,0 +1,78 @@
+"""Per-round communication-cost accounting for fleet topologies.
+
+Reproduces the paper's communication claim at fleet scale: one
+cooperative update ships Ñ(Ñ+m) floats per payload (``payload_nbytes``,
+matching ``UV.nbytes`` / ``Payload.nbytes``) *once*, independent of how
+much data was trained — versus R-round FedAvg shipping the full model
+weights every round (``fedavg_total_cost``).
+
+Topology costs come from ``Topology.payloads_per_round`` (see
+``repro.fleet.topology``): star and hierarchical trade the all-to-all
+D(D−1) payload pattern for O(D) traffic — the Jung et al. (Sensors
+2024) hierarchical clustering cuts D2D traffic by ~75% vs flat
+server-based FedAvg in their deployment, and the same structure holds
+here exactly because the merge is a sum.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.fleet.topology import Topology
+
+
+def payload_nbytes(n_hidden: int, n_out: int, itemsize: int = 4) -> int:
+    """The paper's per-payload cost: Ñ(Ñ+m) floats — U is (Ñ, Ñ), V is
+    (Ñ, m)."""
+    return n_hidden * (n_hidden + n_out) * itemsize
+
+
+def model_nbytes(n_features: int, n_hidden: int, n_out: int, itemsize: int = 4) -> int:
+    """Full SLFN weights (α, b, β) — what FedAvg must ship per round."""
+    return (n_features * n_hidden + n_hidden + n_hidden * n_out) * itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundCost:
+    """One merge round's traffic for a topology."""
+
+    topology: str
+    n_devices: int
+    payloads: int
+    bytes_total: int
+
+    @property
+    def bytes_per_device(self) -> float:
+        return self.bytes_total / max(self.n_devices, 1)
+
+
+def topology_round_cost(
+    topology: Topology, n_hidden: int, n_out: int, itemsize: int = 4
+) -> RoundCost:
+    """Traffic of ONE cooperative update over ``topology``."""
+    nbytes = payload_nbytes(n_hidden, n_out, itemsize)
+    return RoundCost(
+        topology=topology.name,
+        n_devices=topology.n_devices,
+        payloads=topology.payloads_per_round,
+        bytes_total=topology.payloads_per_round * nbytes,
+    )
+
+
+def fedavg_total_cost(
+    n_devices: int,
+    rounds: int,
+    n_features: int,
+    n_hidden: int,
+    n_out: int,
+    itemsize: int = 4,
+) -> RoundCost:
+    """R-round FedAvg baseline: every round each device uploads its
+    model and downloads the average (2 transfers/device/round)."""
+    nbytes = model_nbytes(n_features, n_hidden, n_out, itemsize)
+    payloads = 2 * n_devices * rounds
+    return RoundCost(
+        topology=f"fedavg_r{rounds}",
+        n_devices=n_devices,
+        payloads=payloads,
+        bytes_total=payloads * nbytes,
+    )

@@ -1,0 +1,147 @@
+"""Fleet-scale OS-ELM federation as one stacked pytree.
+
+Hundreds-to-thousands of virtual edge devices are simulated in a single
+process: the whole fleet is ONE ``OSELMState`` whose leaves carry a
+leading device axis (like ``DetectorBank``), trained with
+``vmap``-over-devices of ``scan``-over-stream, and merged with
+topology-aware neighbor sums over the stacked (U, V) axis
+(``repro.fleet.topology``).
+
+This is exact simulation, not approximation: each virtual device runs
+the paper's k=1 sequential update on its own non-IID stream, and the
+cooperative update applies Eq. 8 restricted to the topology's neighbor
+set. An all-to-all topology reproduces `cooperative_update` /
+`mesh_cooperative_update` bit-for-bit (up to f32 summation order).
+
+API sketch::
+
+    fleet = init_fleet(key, n_devices=256, n_features=225, n_hidden=32,
+                       x_init=init_chunks, ridge=1e-3)
+    fleet = fleet_train(fleet, streams)              # (D, T, n) streams
+    fleet = fleet_merge(fleet, ring(256, hops=2), ridge=1e-3)
+    scores = fleet_score(fleet, x_eval)              # (D, k) anomaly scores
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    UV,
+    OSELMState,
+    ae_score,
+    from_uv,
+    init_oselm,
+    init_slfn,
+    oselm_step_k1,
+    to_uv,
+)
+from repro.fleet.topology import Topology
+
+
+def init_fleet(
+    key: jax.Array,
+    n_devices: int,
+    n_features: int,
+    n_hidden: int,
+    x_init: jnp.ndarray,
+    *,
+    activation: str = "sigmoid",
+    ridge: float = 0.0,
+    forget: float = 1.0,
+) -> OSELMState:
+    """Initialize ``n_devices`` OS-ELM autoencoders as one stacked state.
+
+    Every device gets the SAME random SLFN basis (α, b) — Eq. 8 only
+    sums meaningfully when all devices map inputs through an identical
+    hidden layer (the paper's devices share the random basis; see the
+    shared ``init_slfn`` in ``benchmarks.mesh_merge`` and the shared key
+    in ``examples/federated_fleet.py``). Per-device state differs only
+    through the Eq. 13 init chunks: ``x_init`` is (D, n_init,
+    n_features), each device's own non-IID boot data.
+    """
+    if n_hidden >= n_features:
+        raise ValueError(f"autoencoder needs a bottleneck: Ñ={n_hidden} >= n={n_features}")
+    params = init_slfn(key, n_features, n_hidden)
+
+    def one(x0: jnp.ndarray) -> OSELMState:
+        return init_oselm(
+            params, x0, x0, activation=activation, ridge=ridge, forget=forget
+        )
+
+    return jax.vmap(one)(jnp.asarray(x_init))
+
+
+@jax.jit
+def fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
+    """Every device sequentially trains (k=1 autoencoder steps) on its
+    own stream. ``streams``: (D, T, n_features)."""
+
+    def train_one(st: OSELMState, xs: jnp.ndarray) -> OSELMState:
+        def step(s, x):
+            return oselm_step_k1(s, x, x), None
+
+        out, _ = jax.lax.scan(step, st, xs)
+        return out
+
+    return jax.vmap(train_one)(states, jnp.asarray(streams))
+
+
+def fleet_to_uv(states: OSELMState, *, ridge: float = 0.0) -> UV:
+    """Eq. 15 per device: stacked UV with u (D, Ñ, Ñ), v (D, Ñ, m)."""
+    return jax.vmap(partial(to_uv, ridge=ridge))(states)
+
+
+def fleet_from_uv(states: OSELMState, uv: UV, *, ridge: float = 0.0) -> OSELMState:
+    """§4.2 step 5 per device: recover (P, β) from each device's merged
+    (U, V)."""
+    return jax.vmap(partial(from_uv, ridge=ridge))(states, uv)
+
+
+@partial(jax.jit, static_argnames=("topology", "ridge"))
+def fleet_merge(
+    states: OSELMState, topology: Topology, *, ridge: float = 0.0
+) -> OSELMState:
+    """Topology-aware cooperative update: each device's merged (U, V) is
+    the Eq. 8 sum over its neighbor set (self included)."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    mixed = UV(u=topology.mix(uv.u), v=topology.mix(uv.v))
+    return fleet_from_uv(states, mixed, ridge=ridge)
+
+
+@jax.jit
+def fleet_score(states: OSELMState, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-device anomaly scores on shared eval data: (D, k)."""
+    return jax.vmap(lambda s: ae_score(s, x))(states)
+
+
+def fleet_train_rounds(
+    states: OSELMState,
+    streams: jnp.ndarray,
+    topology: Topology,
+    *,
+    rounds: int,
+    ridge: float = 0.0,
+) -> OSELMState:
+    """The paper's "repeatedly applied to synchronize" mode at fleet
+    scale: chunk each stream into ``rounds`` pieces, train a chunk,
+    merge over the topology, repeat. Synchronous (no staleness) —
+    see ``repro.fleet.staleness.fleet_train_async`` for the lagged
+    variant."""
+    streams = jnp.asarray(streams)
+    n_dev, steps, feat = streams.shape
+    if not 1 <= rounds <= steps:
+        raise ValueError(f"need 1 <= rounds={rounds} <= steps={steps}")
+    per = steps // rounds
+    chunks = streams[:, : rounds * per].reshape(n_dev, rounds, per, feat)
+    for r in range(rounds):
+        states = fleet_train(states, chunks[:, r])
+        states = fleet_merge(states, topology, ridge=ridge)
+    return states
+
+
+def device_state(states: OSELMState, idx: int) -> OSELMState:
+    """Slice one device's state out of the stacked fleet."""
+    return jax.tree.map(lambda l: l[idx], states)

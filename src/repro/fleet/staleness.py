@@ -1,0 +1,127 @@
+"""Async-staleness model for repeated cooperative updates.
+
+The paper's cooperative update can be "repeatedly applied to
+synchronize" devices. In a real fleet the exchanged intermediate
+results are not fresh: a device merges peers' (U, V) payloads that lag
+by transport/queueing delay. Because Eq. 8 is a plain sum, staleness is
+modeled *exactly* by summing lagged snapshots of the published payload
+versions — no gradient-staleness approximation is needed.
+
+Model: training proceeds in rounds. Each round every device
+  1. trains on its next stream chunk (k=1 sequential steps),
+  2. publishes its fresh (U, V) — version r,
+  3. merges its OWN fresh (U, V) with each neighbor j's payload of
+     version max(0, r − lag[j]) — ``lag[j]`` is device j's publication
+     delay in rounds (uplink latency, duty-cycling, ...).
+
+``lag = 0`` everywhere reproduces the synchronous
+``fleet_train_rounds`` exactly (tested); growing lags exercise the
+realistic skew regime the ROADMAP's async serving work targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import UV, OSELMState
+from repro.fleet.fleet import fleet_from_uv, fleet_to_uv, fleet_train
+from repro.fleet.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessSchedule:
+    """Per-device publication lags, in merge rounds."""
+
+    lags: np.ndarray  # (D,) int, >= 0
+
+    @property
+    def max_lag(self) -> int:
+        return int(self.lags.max())
+
+    @staticmethod
+    def uniform(n_devices: int, lag: int) -> "StalenessSchedule":
+        return StalenessSchedule(np.full(n_devices, lag, dtype=np.int32))
+
+    @staticmethod
+    def random(
+        n_devices: int, max_lag: int, *, seed: int = 0, stragglers: float = 0.0
+    ) -> "StalenessSchedule":
+        """Lags ~ Uniform{0..max_lag}; a ``stragglers`` fraction of
+        devices is pinned to the maximum lag (slow uplinks)."""
+        rng = np.random.default_rng(seed)
+        lags = rng.integers(0, max_lag + 1, size=n_devices).astype(np.int32)
+        n_straggle = int(round(stragglers * n_devices))
+        if n_straggle:
+            idx = rng.choice(n_devices, size=n_straggle, replace=False)
+            lags[idx] = max_lag
+        return StalenessSchedule(lags)
+
+
+def _lagged_gather(hist: jnp.ndarray, lags: jnp.ndarray, r: int) -> jnp.ndarray:
+    """hist: (L, D, ...) ring of published versions, slot r%L holding the
+    freshest. Returns each source device's payload at version r−lag[j],
+    clamped to version 0."""
+    n_hist = hist.shape[0]
+    versions = jnp.maximum(r - lags, 0)
+    slots = versions % n_hist
+    return hist[slots, jnp.arange(hist.shape[1])]
+
+
+def fleet_train_async(
+    states: OSELMState,
+    streams: jnp.ndarray,
+    topology: Topology,
+    schedule: StalenessSchedule,
+    *,
+    rounds: int,
+    ridge: float = 0.0,
+) -> OSELMState:
+    """Round-based fleet training where merges see stale neighbor
+    payloads according to ``schedule``. With all-zero lags this equals
+    ``fleet_train_rounds`` on the same topology."""
+    streams = jnp.asarray(streams)
+    n_dev, steps, feat = streams.shape
+    if n_dev != topology.n_devices or n_dev != len(schedule.lags):
+        raise ValueError("device-count mismatch between streams/topology/schedule")
+    if not 1 <= rounds <= steps:
+        raise ValueError(f"need 1 <= rounds={rounds} <= steps={steps}")
+    per = steps // rounds
+    chunks = streams[:, : rounds * per].reshape(n_dev, rounds, per, feat)
+
+    lags = jnp.asarray(schedule.lags)
+    n_hist = schedule.max_lag + 1
+    # dense mask works for every topology kind; the diagonal is handled
+    # separately so a device always merges its own FRESH statistics
+    m = jnp.asarray(topology.dense_matrix())
+    m_off = m - jnp.eye(n_dev, dtype=m.dtype)
+
+    hist_u = hist_v = None  # (L, D, Ñ, Ñ) / (L, D, Ñ, m) published versions
+
+    @jax.jit
+    def merge_round(states, hist_u, hist_v, r):
+        fresh = fleet_to_uv(states, ridge=ridge)
+        hist_u = hist_u.at[r % n_hist].set(fresh.u)
+        hist_v = hist_v.at[r % n_hist].set(fresh.v)
+        stale_u = _lagged_gather(hist_u, lags, r)
+        stale_v = _lagged_gather(hist_v, lags, r)
+        merged = UV(
+            u=fresh.u + jnp.einsum("ij,j...->i...", m_off, stale_u),
+            v=fresh.v + jnp.einsum("ij,j...->i...", m_off, stale_v),
+        )
+        return fleet_from_uv(states, merged, ridge=ridge), hist_u, hist_v
+
+    for r in range(rounds):
+        states = fleet_train(states, chunks[:, r])
+        if hist_u is None:
+            uv0 = fleet_to_uv(states, ridge=ridge)
+            hist_u = jnp.zeros((n_hist,) + uv0.u.shape, uv0.u.dtype)
+            hist_v = jnp.zeros((n_hist,) + uv0.v.shape, uv0.v.dtype)
+            # version-0 backfill: before anyone has published, peers see
+            # the round-0 payloads (clamped), not zeros
+            hist_u = jnp.broadcast_to(uv0.u[None], hist_u.shape)
+            hist_v = jnp.broadcast_to(uv0.v[None], hist_v.shape)
+        states, hist_u, hist_v = merge_round(states, hist_u, hist_v, jnp.int32(r))
+    return states

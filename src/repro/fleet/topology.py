@@ -1,0 +1,179 @@
+"""Merge topologies for fleet-scale cooperative updates.
+
+The paper's cooperative update (Eq. 8) is a plain sum of per-device
+(U, V) sufficient statistics, so *any* federation topology reduces to a
+sparse summation pattern over the stacked device axis:
+
+    merged Uᵢ = Σⱼ Mᵢⱼ Uⱼ          M ∈ {0,1}^(D×D), Mᵢᵢ = 1
+
+Four topologies are provided, spanning the related-work design space:
+
+- ``all_to_all``  — the paper's baseline: every device exchanges with
+  every peer (D2D full mesh). M = 1.
+- ``star``        — Fig. 4/5 server exchange: devices upload to a hub,
+  the hub sums, and broadcasts the merged result back. The *result* is
+  identical to all-to-all (M = 1) but the communication cost is O(D)
+  payloads instead of O(D²).
+- ``ring``        — gossip: each device merges with its ``hops``
+  nearest ring neighbors per round. Partial mixing; repeated rounds
+  diffuse information around the ring.
+- ``hierarchical``— Jung et al. (Sensors 2024) two-tier aggregation:
+  location clusters sum locally (segment-sum), cluster heads exchange
+  cluster aggregates, and broadcast back. With head exchange the result
+  equals all-to-all at a fraction of the traffic; without it, clusters
+  stay isolated (block-diagonal M).
+
+``Topology.mix`` applies M to any stacked (D, ...) array — for ring and
+all-to-all via a dense einsum, for hierarchical via
+``jax.ops.segment_sum`` over the cluster ids (the sparse path that
+later sharded-fleet / Pallas work targets).
+
+Communication accounting lives in ``repro.fleet.comm``; each topology
+reports its per-round payload transmission count via
+``payloads_per_round``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash, so
+class Topology:                                # a Topology can be a jit static arg
+    """A merge pattern over ``n_devices`` stacked learners.
+
+    ``kind`` selects the mixing implementation:
+      - "dense": ``matrix`` (D, D) 0/1 mask, einsum neighbor-sum
+      - "segment": two-tier segment-sum over ``cluster_ids`` (+ head
+        exchange when ``head_exchange``)
+    """
+
+    name: str
+    n_devices: int
+    kind: str  # "dense" | "segment"
+    matrix: np.ndarray | None = None          # (D, D) float32, incl. diagonal
+    cluster_ids: np.ndarray | None = None     # (D,) int32, for kind="segment"
+    head_exchange: bool = True
+    payloads_per_round: int = 0               # payload transmissions per merge round
+
+    def dense_matrix(self) -> np.ndarray:
+        """The equivalent (D, D) mixing mask, whatever the kind — used by
+        the async-staleness path and by tests cross-checking the
+        segment-sum implementation."""
+        if self.matrix is not None:
+            return self.matrix
+        assert self.cluster_ids is not None
+        same = self.cluster_ids[:, None] == self.cluster_ids[None, :]
+        m = np.ones_like(same, dtype=np.float32) if self.head_exchange \
+            else same.astype(np.float32)
+        return m
+
+    def mix(self, stacked: jnp.ndarray) -> jnp.ndarray:
+        """Neighbor-sum a stacked (D, ...) array: out[i] = Σⱼ Mᵢⱼ x[j]."""
+        if self.kind == "segment":
+            cids = jnp.asarray(self.cluster_ids)
+            n_clusters = int(self.cluster_ids.max()) + 1
+            cluster_sums = jax.ops.segment_sum(
+                stacked, cids, num_segments=n_clusters
+            )
+            if self.head_exchange:
+                # heads exchange cluster aggregates → every cluster ends
+                # up with the global sum, broadcast back to members
+                total = jnp.sum(cluster_sums, axis=0)
+                return jnp.broadcast_to(total[None], stacked.shape)
+            return cluster_sums[cids]
+        m = jnp.asarray(self.matrix)
+        return jnp.einsum("ij,j...->i...", m, stacked)
+
+    @property
+    def is_fully_connected(self) -> bool:
+        return bool((self.dense_matrix() > 0).all())
+
+
+def all_to_all(n_devices: int) -> Topology:
+    """Paper baseline: full D2D mesh — every device downloads every
+    peer's (U, V). D(D−1) payload transmissions per round."""
+    return Topology(
+        name="all_to_all",
+        n_devices=n_devices,
+        kind="dense",
+        matrix=np.ones((n_devices, n_devices), dtype=np.float32),
+        payloads_per_round=n_devices * (n_devices - 1),
+    )
+
+
+def star(n_devices: int) -> Topology:
+    """Fig. 4/5 server topology: upload to hub, hub sums, broadcast.
+    Merged result is identical to all-to-all; traffic is 2(D−1)
+    payloads (D−1 uploads + D−1 merged downloads; the hub is local to
+    itself). Implemented as the single-cluster segment path so the
+    mix is the O(D) sum-and-broadcast the hub actually performs, not
+    a dense D×D einsum."""
+    return Topology(
+        name="star",
+        n_devices=n_devices,
+        kind="segment",
+        cluster_ids=np.zeros(n_devices, dtype=np.int32),
+        head_exchange=True,
+        payloads_per_round=2 * (n_devices - 1),
+    )
+
+
+def ring(n_devices: int, hops: int = 1) -> Topology:
+    """Gossip ring: device i merges with its ±1..hops ring neighbors.
+    With hops ≥ ⌈(D−1)/2⌉ the ring closes into a full mesh."""
+    idx = np.arange(n_devices)
+    dist = np.abs(idx[:, None] - idx[None, :])
+    circ = np.minimum(dist, n_devices - dist)
+    m = (circ <= hops).astype(np.float32)
+    degree = int(m.sum(axis=1)[0]) - 1  # neighbors actually sent to
+    return Topology(
+        name=f"ring{hops}" if hops != 1 else "ring",
+        n_devices=n_devices,
+        kind="dense",
+        matrix=m,
+        payloads_per_round=n_devices * degree,
+    )
+
+
+def hierarchical(
+    n_devices: int, n_clusters: int, *, head_exchange: bool = True
+) -> Topology:
+    """Jung et al. two-tier location clusters (contiguous blocks):
+    members upload to their cluster head, heads exchange cluster
+    aggregates all-to-all, heads broadcast the merged result back.
+
+    Per-round payloads: (D − C) member uploads + C(C−1) head exchanges
+    + (D − C) member downloads.
+    """
+    if not 1 <= n_clusters <= n_devices:
+        raise ValueError(f"need 1 <= n_clusters={n_clusters} <= n_devices={n_devices}")
+    cluster_ids = (np.arange(n_devices) * n_clusters // n_devices).astype(np.int32)
+    n_members_traffic = n_devices - n_clusters  # non-head members, up + down each
+    head_traffic = n_clusters * (n_clusters - 1) if head_exchange else 0
+    return Topology(
+        name="hierarchical" if head_exchange else "hierarchical_isolated",
+        n_devices=n_devices,
+        kind="segment",
+        cluster_ids=cluster_ids,
+        head_exchange=head_exchange,
+        payloads_per_round=2 * n_members_traffic + head_traffic,
+    )
+
+
+TOPOLOGIES = {
+    "all_to_all": all_to_all,
+    "star": star,
+    "ring": ring,
+    "hierarchical": lambda n, **kw: hierarchical(n, max(1, n // 8), **kw),
+}
+
+
+def make_topology(name: str, n_devices: int, **kw) -> Topology:
+    try:
+        return TOPOLOGIES[name](n_devices, **kw)
+    except KeyError as e:
+        raise ValueError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)}") from e

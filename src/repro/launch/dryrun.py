@@ -23,7 +23,6 @@ os.environ["XLA_FLAGS"] = (
 ).strip()
 
 import argparse
-import dataclasses
 import gzip
 import json
 import math
@@ -91,7 +90,6 @@ def lower_combo(arch: str, shape_name: str, mesh, *, verbose: bool = True):
     params_struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
     p_specs = param_specs(params_struct, mesh)
     n_params = sum(math.prod(x.shape) for x in jax.tree.leaves(params_struct))
-    from repro.models.model import active_param_count as _apc  # shape-safe
     # active params from struct: reuse counting on shapes
     if cfg.n_experts:
         expert = 0
@@ -226,7 +224,7 @@ def run_combo(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path = AR
 
 def reanalyze(out_dir: Path = ARTIFACTS) -> None:
     """Re-derive roofline metrics from saved HLO (no recompilation)."""
-    from repro.roofline.analysis import HW_V5E, RooflineReport
+    from repro.roofline.analysis import RooflineReport
     from repro.roofline.hlo_costs import analyze_hlo
 
     for jf in sorted(out_dir.glob("*.json")):

@@ -21,7 +21,6 @@ os.environ["XLA_FLAGS"] = (
 import argparse
 import gzip
 import json
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -11,10 +11,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
-from repro.core import ae_score, ae_train_stream, init_autoencoder, oselm_step
+from repro.core import ae_score, init_autoencoder, oselm_step
 from repro.models import decode_step, encoder_forward, init_params, prefill
 
 

@@ -118,7 +118,6 @@ def opt_state_specs(opt_state: PyTree, params_specs_tree: PyTree) -> PyTree:
 
 def batch_specs(batch_kind: str, dp_axes: tuple[str, ...], mesh: Mesh, cfg=None) -> dict:
     """Input shardings per shape kind. Batch dim on the data(+pod) axes."""
-    dp = P(dp_axes)
     if batch_kind == "train":
         specs = {"tokens": P(dp_axes, None), "labels": P(dp_axes, None)}
         if cfg is not None and cfg.frontend is not None:

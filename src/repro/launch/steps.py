@@ -13,7 +13,6 @@ the paper itself (EXPERIMENTS.md §Perf pair 3).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable
 
 import jax

@@ -12,12 +12,10 @@ synchronizes them — concept-drift scoring comes along for free.
 from __future__ import annotations
 
 import argparse
-import math
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
@@ -25,7 +23,7 @@ from repro.core import init_oselm, init_slfn, oselm_loss
 from repro.federated.mesh_federation import mesh_cooperative_update
 from repro.launch.mesh import data_axes, make_host_mesh
 from repro.launch.steps import make_detector_step, make_optimizer, make_train_step
-from repro.models import init_params, lm_loss
+from repro.models import init_params
 
 
 def synthetic_batch(key, vocab, batch, seq, step):
@@ -73,7 +71,8 @@ def main() -> None:
     det0 = init_oselm(slfn, warm, warm, activation="identity", ridge=1e-2)
     det_states = jax.tree.map(lambda l: jnp.stack([l] * n_dev), det0)
     det_step = make_detector_step(mesh, dp, merge=False)
-    det_merge = lambda st: mesh_cooperative_update(st, mesh, dp, ridge=1e-2)
+    def det_merge(st):
+        return mesh_cooperative_update(st, mesh, dp, ridge=1e-2)
 
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 

@@ -162,7 +162,10 @@ def init_slstm(key, cfg: ArchConfig, dtype) -> dict:
 def init_block(key, kind: str, cfg: ArchConfig, dtype) -> dict:
     d = cfg.d_model
     ks = jax.random.split(key, 8)
-    ln = lambda: jnp.zeros((d,), jnp.float32)
+
+    def ln():
+        return jnp.zeros((d,), jnp.float32)
+
     if kind in ("dense", "swa", "enc"):
         return {"ln1": ln(), "attn": init_attn(ks[0], cfg, dtype), "ln2": ln(),
                 "ffn": init_ffn(ks[1], cfg, dtype)}

@@ -15,9 +15,7 @@ report one layer's collectives).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,

@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    UV,
     ae_score,
     ae_train_step_guarded,
     ae_train_stream,

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.baselines import (
     bpnn3_config,
@@ -14,7 +13,6 @@ from repro.baselines import (
 )
 from repro.baselines.fedavg import FedAvgConfig, average_params
 from repro.data import (
-    make_dataset,
     make_driving_dataset,
     make_har_dataset,
     make_mnist_like_dataset,

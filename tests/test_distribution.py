@@ -1,6 +1,5 @@
 """Tests for sharding rules, optimizers, checkpointing, and the mesh
 federation (subprocess with 8 host devices)."""
-import json
 import os
 import subprocess
 import sys

@@ -1,10 +1,9 @@
 """Tests for the federated protocol layer (client/server + selection)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ae_score, init_slfn, to_uv
+from repro.core import to_uv
 from repro.data import make_har_dataset
 from repro.data.pipeline import make_pattern_stream
 from repro.federated import EdgeDevice, FederationServer

@@ -1,0 +1,312 @@
+"""Fleet simulator tests: topology merges vs the paper's Eq. 8 sum,
+async staleness, the non-IID partitioner, and communication accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cooperative_update, oselm_train_sequential, to_uv
+from repro.data import make_har_dataset
+from repro.data.synthetic import AnomalyDataset
+from repro.fleet import (
+    DriftEvent,
+    StalenessSchedule,
+    all_to_all,
+    device_state,
+    fedavg_total_cost,
+    fleet_merge,
+    fleet_score,
+    fleet_to_uv,
+    fleet_train,
+    fleet_train_async,
+    fleet_train_rounds,
+    hierarchical,
+    init_fleet,
+    make_fleet_streams,
+    make_topology,
+    model_nbytes,
+    payload_nbytes,
+    random_drift_schedule,
+    ring,
+    star,
+    topology_round_cost,
+)
+
+D, H, STEPS, RIDGE = 12, 8, 32, 1e-3
+
+
+@pytest.fixture(scope="module")
+def har2():
+    """Normalized 2-pattern HAR subset (cheap, well-conditioned)."""
+    ds = make_har_dataset(seed=0, samples_per_class=80, n_features=48)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    ds = ds._replace(x=((ds.x - lo) / (hi - lo + 1e-6)).astype(np.float32))
+    mask = ds.y < 2
+    return AnomalyDataset(ds.name, ds.x[mask], ds.y[mask], ds.class_names[:2])
+
+
+@pytest.fixture(scope="module")
+def trained_fleet(har2):
+    fs = make_fleet_streams(har2, D, STEPS, n_init=2 * H, seed=0)
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), D, har2.n_features, H, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    return fleet_train(fleet, fs.xs), fs
+
+
+def test_fleet_train_matches_per_device_sequential(trained_fleet, har2):
+    """vmap-over-devices training is exactly per-device scan training."""
+    fleet, fs = trained_fleet
+    init = init_fleet(
+        jax.random.PRNGKey(0), D, har2.n_features, H, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    for d in (0, D - 1):
+        ref = oselm_train_sequential(
+            device_state(init, d), jnp.asarray(fs.xs[d]), jnp.asarray(fs.xs[d])
+        )
+        np.testing.assert_allclose(
+            np.asarray(device_state(fleet, d).beta), np.asarray(ref.beta),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_all_to_all_matches_pairwise_cooperative_update(trained_fleet):
+    """The stacked all-to-all merge IS the paper's Eq. 8 cooperative
+    update: identical to sequential pairwise uv_add on device 0."""
+    fleet, _ = trained_fleet
+    merged = fleet_merge(fleet, all_to_all(D), ridge=0.0)
+    states = [device_state(fleet, d) for d in range(D)]
+    ref = cooperative_update(states[0], *[to_uv(s) for s in states[1:]])
+    np.testing.assert_allclose(
+        np.asarray(device_state(merged, 0).beta), np.asarray(ref.beta),
+        rtol=1e-3, atol=1e-4,
+    )
+    # and every device ends up with the identical merged model
+    np.testing.assert_allclose(
+        np.asarray(merged.beta), np.asarray(merged.beta[:1]).repeat(D, 0),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize(
+    "topo_fn",
+    [
+        star,
+        lambda n: ring(n, hops=(n - 1 + 1) // 2),  # ring closed into full mesh
+        lambda n: hierarchical(n, 3),
+        lambda n: hierarchical(n, 1),
+    ],
+    ids=["star", "full_ring", "hierarchical", "hierarchical_single_cluster"],
+)
+def test_fully_connected_topologies_equal_all_to_all(trained_fleet, topo_fn):
+    """Acceptance: every topology's merged state equals the all-to-all
+    Eq. 8 sum when the graph is fully connected."""
+    fleet, _ = trained_fleet
+    topo = topo_fn(D)
+    assert topo.is_fully_connected
+    ref = fleet_merge(fleet, all_to_all(D), ridge=RIDGE)
+    out = fleet_merge(fleet, topo, ridge=RIDGE)
+    np.testing.assert_allclose(
+        np.asarray(out.beta), np.asarray(ref.beta), rtol=1e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.p), np.asarray(ref.p), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_partial_ring_matches_manual_neighbor_sum(trained_fleet):
+    """A 1-hop ring merge equals the hand-built Eq. 8 sum over
+    {i-1, i, i+1} for each device."""
+    fleet, _ = trained_fleet
+    topo = ring(D, hops=1)
+    assert not topo.is_fully_connected
+    merged = fleet_merge(fleet, topo, ridge=0.0)
+    uv = fleet_to_uv(fleet, ridge=0.0)
+    for d in (0, 5):
+        nbrs = [(d - 1) % D, d, (d + 1) % D]
+        u_ref = sum(np.asarray(uv.u[j]) for j in nbrs)
+        got = fleet_to_uv(
+            jax.tree.map(lambda l: l[d][None], merged), ridge=0.0
+        )
+        np.testing.assert_allclose(np.asarray(got.u[0]), u_ref, rtol=1e-3, atol=0.5)
+
+
+def test_hierarchical_segment_sum_matches_dense_matrix(trained_fleet):
+    """The segment-sum implementation equals mixing with the equivalent
+    dense matrix, with and without head exchange."""
+    fleet, _ = trained_fleet
+    uv = fleet_to_uv(fleet, ridge=RIDGE)
+    for head_exchange in (True, False):
+        topo = hierarchical(D, 4, head_exchange=head_exchange)
+        dense = jnp.einsum("ij,j...->i...", jnp.asarray(topo.dense_matrix()), uv.u)
+        np.testing.assert_allclose(
+            np.asarray(topo.mix(uv.u)), np.asarray(dense), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_isolated_clusters_do_not_mix(trained_fleet):
+    """Without head exchange, devices in different clusters keep
+    different merged models."""
+    fleet, _ = trained_fleet
+    topo = hierarchical(D, 3, head_exchange=False)
+    merged = fleet_merge(fleet, topo, ridge=RIDGE)
+    cids = topo.cluster_ids
+    same = np.flatnonzero(cids == cids[0])
+    other = np.flatnonzero(cids != cids[0])
+    b = np.asarray(merged.beta)
+    np.testing.assert_allclose(b[same[0]], b[same[-1]], rtol=1e-4, atol=1e-5)
+    assert np.max(np.abs(b[same[0]] - b[other[0]])) > 1e-4
+
+
+def test_async_zero_lag_equals_synchronous(trained_fleet, har2):
+    fs = trained_fleet[1]
+
+    def fresh():
+        return init_fleet(
+            jax.random.PRNGKey(0), D, har2.n_features, H, fs.x_init,
+            activation="identity", ridge=RIDGE,
+        )
+
+    topo = ring(D, hops=2)
+    sync = fleet_train_rounds(fresh(), fs.xs, topo, rounds=4, ridge=RIDGE)
+    azero = fleet_train_async(
+        fresh(), fs.xs, topo, StalenessSchedule.uniform(D, 0),
+        rounds=4, ridge=RIDGE,
+    )
+    np.testing.assert_allclose(
+        np.asarray(azero.beta), np.asarray(sync.beta), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_async_lagged_merge_stays_finite_and_differs(trained_fleet, har2):
+    fs = trained_fleet[1]
+
+    def fresh():
+        return init_fleet(
+            jax.random.PRNGKey(0), D, har2.n_features, H, fs.x_init,
+            activation="identity", ridge=RIDGE,
+        )
+
+    topo = star(D)
+    sched = StalenessSchedule.random(D, max_lag=2, seed=3, stragglers=0.25)
+    assert sched.max_lag == 2 and (sched.lags >= 0).all()
+    lagged = fleet_train_async(fresh(), fs.xs, topo, sched, rounds=4, ridge=RIDGE)
+    sync = fleet_train_async(
+        fresh(), fs.xs, topo, StalenessSchedule.uniform(D, 0),
+        rounds=4, ridge=RIDGE,
+    )
+    assert bool(jnp.isfinite(lagged.beta).all())
+    assert float(jnp.max(jnp.abs(lagged.beta - sync.beta))) > 1e-6
+
+
+def test_rounds_validation(trained_fleet, har2):
+    fleet, fs = trained_fleet
+    for rounds in (0, STEPS + 1):
+        with pytest.raises(ValueError, match="rounds"):
+            fleet_train_rounds(fleet, fs.xs, star(D), rounds=rounds)
+        with pytest.raises(ValueError, match="rounds"):
+            fleet_train_async(
+                fleet, fs.xs, star(D), StalenessSchedule.uniform(D, 0), rounds=rounds
+            )
+
+
+def test_partitioner_drift_order_independent(har2):
+    """A later-step drift wins even when the schedule is supplied out
+    of order."""
+    drift = (
+        DriftEvent(device=0, step=20, new_pattern=1),
+        DriftEvent(device=0, step=5, new_pattern=0),
+    )
+    fs = make_fleet_streams(har2, 1, 24, n_init=4, drift=drift, seed=0)
+    assert (fs.pattern_of_device[0, 5:20] == 0).all()
+    assert (fs.pattern_of_device[0, 20:] == 1).all()
+
+
+def test_partitioner_round_robin_and_drift(har2):
+    drift = (DriftEvent(device=1, step=10, new_pattern=0),)
+    fs = make_fleet_streams(har2, 4, 24, n_init=8, drift=drift, seed=0)
+    assert fs.xs.shape == (4, 24, har2.n_features)
+    assert fs.x_init.shape == (4, 8, har2.n_features)
+    # round robin: device d starts on pattern d % 2
+    for d in range(4):
+        assert fs.initial_pattern(d) == d % 2
+    # drift: device 1 switches to pattern 0 at step 10
+    assert (fs.pattern_of_device[1, :10] == 1).all()
+    assert (fs.pattern_of_device[1, 10:] == 0).all()
+    # non-drifting device keeps its pattern
+    assert (fs.pattern_of_device[0] == 0).all()
+    # stream samples actually come from the labeled pattern's pool
+    pool0 = har2.pattern(0)
+    assert all(
+        (pool0 == fs.xs[1, t]).all(1).any() for t in (10, 23)
+    )
+
+
+def test_partitioner_dirichlet_mixture(har2):
+    fs = make_fleet_streams(
+        har2, 8, 64, n_init=4, assignment="dirichlet", alpha=100.0, seed=0
+    )
+    # near-IID at huge alpha: every device sees both patterns
+    for d in range(8):
+        assert len(np.unique(fs.pattern_of_device[d])) == 2
+    with pytest.raises(ValueError):
+        make_fleet_streams(har2, 2, 8, assignment="nope")
+
+
+def test_random_drift_schedule_bounds(har2):
+    drift = random_drift_schedule(20, 40, 2, frac=0.25, seed=1)
+    assert len(drift) == 5
+    for ev in drift:
+        assert 0 <= ev.device < 20
+        assert 10 <= ev.step < 30
+        assert 0 <= ev.new_pattern < 2
+        # never a no-op: the drift target differs from the device's
+        # round-robin home pattern
+        assert ev.new_pattern != ev.device % 2
+    with pytest.raises(ValueError):
+        random_drift_schedule(4, 8, 1)
+
+
+def test_comm_cost_formulas():
+    n, m = 16, 48  # Ñ, features
+    pb = payload_nbytes(n, m)
+    assert pb == n * (n + m) * 4  # the paper's Ñ(Ñ+m) floats
+    assert topology_round_cost(all_to_all(D), n, m).payloads == D * (D - 1)
+    assert topology_round_cost(star(D), n, m).payloads == 2 * (D - 1)
+    assert topology_round_cost(ring(D, hops=1), n, m).payloads == 2 * D
+    h = hierarchical(D, 3)
+    assert topology_round_cost(h, n, m).payloads == 2 * (D - 3) + 3 * 2
+    assert topology_round_cost(h, n, m).bytes_total == h.payloads_per_round * pb
+    fed = fedavg_total_cost(D, 10, m, n, m)
+    assert fed.payloads == 2 * D * 10
+    assert fed.bytes_total == fed.payloads * model_nbytes(m, n, m)
+    # the paper's claim at protocol level: one star round beats R-round
+    # FedAvg whenever Ñ(Ñ+m) < R · model size
+    assert topology_round_cost(star(D), n, m).bytes_total < fed.bytes_total
+
+
+def test_make_topology_registry():
+    t = make_topology("ring", 10, hops=3)
+    assert t.n_devices == 10 and t.name == "ring3"
+    assert make_topology("hierarchical", 16).kind == "segment"
+    with pytest.raises(ValueError):
+        make_topology("torus", 10)
+    with pytest.raises(ValueError):
+        hierarchical(4, 9)
+
+
+def test_fleet_score_shape(trained_fleet, har2):
+    fleet, _ = trained_fleet
+    x = jnp.asarray(har2.x[:7])
+    assert fleet_score(fleet, x).shape == (D, 7)
+
+
+def test_topology_is_static_and_frozen():
+    t = all_to_all(4)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        t.name = "x"
+    assert hash(t) != hash(all_to_all(4))  # identity hash → valid jit static arg

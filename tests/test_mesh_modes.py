@@ -1,7 +1,6 @@
 """Tests for the mesh federation's periodic-merge mode and the
 single-device degenerate cases (no multi-device requirement)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (

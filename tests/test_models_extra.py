@@ -1,11 +1,12 @@
 """Extra model-substrate tests: attention equivalences, MoE dispatch
 parity, GLA engine properties, loss chunking invariance."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import (

@@ -5,12 +5,13 @@ framework — associativity/commutativity is what legalizes running the
 paper's cooperative update as a psum all-reduce on a TPU mesh.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    UV,
     cooperative_update,
     init_oselm,
     init_slfn,

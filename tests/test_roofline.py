@@ -1,10 +1,9 @@
 """Tests for the HLO cost walker and roofline report."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.roofline.analysis import HW_V5E, RooflineReport
+from repro.roofline.analysis import RooflineReport
 from repro.roofline.hlo_costs import analyze_hlo, parse_hlo
 
 
@@ -118,6 +117,5 @@ def test_roofline_report_terms():
 
 
 def test_collective_bytes_counted():
-    import os
     if len(jax.devices()) < 2:
         pytest.skip("needs >1 device (run under XLA_FLAGS device_count)")

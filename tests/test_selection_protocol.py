@@ -1,0 +1,130 @@
+"""Coverage for federated/selection.py strategies and the
+federated/protocol.py Payload serialization + CommLog accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import UV, init_autoencoder, to_uv
+from repro.federated import (
+    EdgeDevice,
+    FederationServer,
+    Payload,
+    all_clients,
+    loss_threshold_selection,
+    resource_constrained_selection,
+)
+from repro.federated.protocol import cooperative_round
+
+IDS = ["a", "b", "c", "d"]
+
+
+# --------------------------------------------------- selection strategies
+
+def test_all_clients_is_identity():
+    assert list(all_clients(IDS)) == IDS
+
+
+def test_resource_constrained_selection_filters_by_budget():
+    budgets = {"a": 1.0, "b": 5.0, "c": 2.5}  # "d" unknown → inf → excluded
+    select = resource_constrained_selection(budgets, threshold=2.5)
+    assert list(select(IDS)) == ["a", "c"]
+    # tight deadline excludes everyone
+    assert list(resource_constrained_selection(budgets, threshold=0.5)(IDS)) == []
+
+
+def test_loss_threshold_selection_excludes_unsatisfying_models():
+    losses = {"a": 0.01, "b": 9.0, "c": 0.2, "d": 0.19}
+    select = loss_threshold_selection(losses, max_loss=0.2)
+    assert list(select(IDS)) == ["a", "c", "d"]
+    # missing id → inf loss → excluded
+    assert list(loss_threshold_selection({}, max_loss=1e9)(IDS)) == []
+
+
+# ------------------------------------------------- Payload serialization
+
+@pytest.fixture(scope="module")
+def uv():
+    x = np.random.default_rng(0).normal(size=(64, 24)).astype(np.float32)
+    st = init_autoencoder(
+        jax.random.PRNGKey(0), 24, 8, jnp.asarray(x), ridge=1e-3
+    )
+    return to_uv(st)
+
+
+def test_payload_round_trip(uv):
+    p = Payload.from_uv("dev-0", uv, version=3)
+    assert p.device_id == "dev-0" and p.version == 3
+    back = p.to_uv()
+    assert isinstance(back, UV)
+    np.testing.assert_array_equal(np.asarray(back.u), np.asarray(uv.u))
+    np.testing.assert_array_equal(np.asarray(back.v), np.asarray(uv.v))
+
+
+def test_payload_nbytes_is_the_papers_claim(uv):
+    p = Payload.from_uv("dev-0", uv)
+    n_hidden, m = uv.u.shape[0], uv.v.shape[1]
+    # Ñ(Ñ+m) floats — independent of how much data was trained
+    assert p.nbytes == n_hidden * (n_hidden + m) * 4
+    assert p.nbytes == uv.nbytes
+
+
+def test_server_commlog_accounting(uv):
+    server = FederationServer()
+    for i in range(3):
+        server.upload(Payload.from_uv(f"dev-{i}", uv, version=1))
+    assert server.log.uploads == 3
+    assert server.log.bytes_up == 3 * uv.nbytes
+    assert sorted(server.peers_of("dev-0")) == ["dev-1", "dev-2"]
+    got = server.download("dev-1")
+    assert got.device_id == "dev-1"
+    assert server.log.downloads == 1
+    assert server.log.bytes_down == uv.nbytes
+    # re-upload overwrites the stored version, not a new slot
+    server.upload(Payload.from_uv("dev-1", uv, version=2))
+    assert server.store["dev-1"].version == 2
+    assert len(server.store) == 3
+
+
+# ------------------------------------------- cooperative_round + select
+
+def _make_devices(n: int, n_features: int = 24, n_hidden: int = 8):
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)  # shared basis, as the paper requires
+    devs = []
+    for i in range(n):
+        x = rng.normal(size=(64, n_features)).astype(np.float32) * 0.1 + i
+        d = EdgeDevice(f"dev-{i}", key, n_features, n_hidden, x[:32], ridge=1e-3)
+        d.train(x[32:])
+        devs.append(d)
+    return devs
+
+
+def test_cooperative_round_respects_selection():
+    devs = _make_devices(3)
+    before = [np.asarray(d.state.beta).copy() for d in devs]
+    server = FederationServer()
+
+    def select(ids):
+        return [i for i in ids if i != "dev-2"]
+
+    cooperative_round(devs, server, select=select)
+    # selected devices merged (beta moved), excluded one untouched
+    assert np.max(np.abs(np.asarray(devs[0].state.beta) - before[0])) > 1e-6
+    assert np.max(np.abs(np.asarray(devs[1].state.beta) - before[1])) > 1e-6
+    np.testing.assert_array_equal(np.asarray(devs[2].state.beta), before[2])
+    # everyone uploads; only the 2 chosen download their 1 peer each
+    assert server.log.uploads == 3
+    assert server.log.downloads == 2
+
+
+def test_cooperative_round_default_merges_everyone():
+    devs = _make_devices(3)
+    server = FederationServer()
+    cooperative_round(devs, server)
+    assert server.log.uploads == 3
+    assert server.log.downloads == 3 * 2
+    # all devices converge to the identical merged model
+    b0 = np.asarray(devs[0].state.beta)
+    for d in devs[1:]:
+        np.testing.assert_allclose(np.asarray(d.state.beta), b0, rtol=1e-3, atol=1e-4)

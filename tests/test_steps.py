@@ -3,9 +3,7 @@ detector step)."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.launch.steps import make_detector_step, make_optimizer, make_train_step
