@@ -20,19 +20,30 @@ Asserted claims:
     hierarchical must always undercut all-to-all,
   - post-merge AUC stays above 0.8 on the HAR-like dataset.
 
-    PYTHONPATH=src python benchmarks/fleet_scale.py [--smoke]
-    PYTHONPATH=src python -m benchmarks.fleet_scale [--smoke]
+``--merge-bench`` instead microbenchmarks the merge round itself:
+sparse topology mixing (banded roll-sum for ring, segment-sum +
+broadcast for star/hierarchical — the structure the Pallas
+``topology_merge`` kernels exploit) against the dense D×D einsum
+baseline at D ∈ {256, 1024, 4096}, plus the cluster-level §4.2 solve
+against D per-device solves. Wall-clock (jitted XLA on this backend) +
+analytic FLOPs/bytes accounting are written to ``BENCH_fleet_merge.json``
+and the sparse paths are asserted to beat dense at D ≥ 1024.
 
-``--smoke`` shrinks the grid to seconds for CI; the default grid runs a
->=256-device simulation on CPU in one process.
+    PYTHONPATH=src python benchmarks/fleet_scale.py [--smoke|--merge-bench]
+    PYTHONPATH=src python -m benchmarks.fleet_scale [--smoke|--merge-bench]
+
+``--smoke`` shrinks the grid to seconds for CI and also emits the
+merge-bench JSON artifact (smaller grid, D ≤ 1024).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 if __package__ in (None, ""):  # `python benchmarks/fleet_scale.py` from repo root
@@ -172,14 +183,188 @@ def main(device_grid: tuple[int, ...] = (64, 256)) -> list[str]:
     return lines
 
 
+# ---------------------------------------------------------------- merge bench
+
+MERGE_GRID = (256, 1024, 4096)   # the tentpole's D sweep
+MERGE_GRID_SMOKE = (256, 1024)   # CI still covers the asserted D=1024 win
+DENSE_LIMIT = 1024               # dense einsum beyond this is accounted, not timed
+
+
+def _mix_flops_bytes(topo, n_dev: int, f: int) -> tuple[int, int]:
+    """Analytic cost of one sparse mix of a (D, Ñ, Ñ+m) payload stack
+    (f = Ñ(Ñ+m) floats per payload). Bytes are the minimum HBM traffic
+    the adjacency structure requires (each payload read once — ideal
+    band/cluster reuse), the apples-to-apples bound the dense baseline
+    is also given."""
+    if topo.kind == "banded":
+        n_off = min(2 * topo.hops + 1, n_dev)
+        flops = (n_off - 1) * n_dev * f
+        nbytes = 4 * (n_dev * f + n_dev * f)  # read stack once + write
+    elif topo.kind == "segment":
+        # the per-device merged (U, V) is never materialized: the C
+        # cluster aggregates ARE the merge result, consumed directly by
+        # the cluster-level solve (fleet._merge_body)
+        c = topo.n_clusters
+        flops = (n_dev - c) * f + (c - 1) * f * (1 if topo.head_exchange else 0)
+        nbytes = 4 * (n_dev * f + c * f)
+    else:  # dense
+        flops = 2 * n_dev * n_dev * f
+        nbytes = 4 * (n_dev * f + n_dev * n_dev + n_dev * f)
+    return int(flops), int(nbytes)
+
+
+def _dense_flops_bytes(n_dev: int, f: int) -> tuple[int, int]:
+    return 2 * n_dev * n_dev * f, 4 * (n_dev * f + n_dev * n_dev + n_dev * f)
+
+
+def _n_solves(topo) -> int:
+    """§4.2 solves per merge round after cluster-level dispatch: one per
+    equivalence class of merged models."""
+    if topo.is_fully_connected:
+        return 1
+    if topo.kind == "segment":
+        return topo.n_clusters
+    return topo.n_devices
+
+
+def merge_bench(
+    device_grid: tuple[int, ...] = MERGE_GRID,
+    n_hidden: int = N_HIDDEN,
+    n_features: int = 48,
+    dense_limit: int = DENSE_LIMIT,
+) -> dict:
+    """Sparse-vs-dense merge-round microbenchmark (see module docstring)."""
+    f = n_hidden * (n_hidden + n_features)
+    rows = []
+    for n_dev in device_grid:
+        key = jax.random.PRNGKey(n_dev)
+        w = jax.random.normal(key, (n_dev, n_hidden, n_hidden + n_features))
+        # synthetic SPD merged-U stack for the solve comparison
+        h = jax.random.normal(key, (n_dev, 2 * n_hidden, n_hidden))
+        u = jnp.einsum("dkn,dkm->dnm", h, h) + 1e-2 * jnp.eye(n_hidden)
+        v = w[:, :, n_hidden:]
+
+        per_device_solve = jax.jit(
+            lambda u, v: jax.vmap(
+                lambda a, b: jax.scipy.linalg.cho_solve(
+                    jax.scipy.linalg.cho_factor(a), b
+                )
+            )(u, v)
+        )
+        one_solve = jax.jit(
+            lambda u, v: jax.scipy.linalg.cho_solve(
+                jax.scipy.linalg.cho_factor(u[0]), v[0]
+            )
+        )
+        solve_all_us = timed(per_device_solve, u, v, warmup=1, iters=5)
+        solve_one_us = timed(one_solve, u, v, warmup=1, iters=5)
+
+        for topo in (ring(n_dev, hops=2), hierarchical(n_dev, max(1, n_dev // 8)),
+                     star(n_dev)):
+            if topo.kind == "segment":
+                # what fleet_merge executes: aggregates only, no
+                # per-device merged-UV materialization
+                cids = jnp.asarray(topo.cluster_ids)
+
+                def sparse_fn(x, t=topo, c=cids):
+                    s = jax.ops.segment_sum(x, c, num_segments=t.n_clusters)
+                    return s.sum(0) if t.head_exchange else s
+            else:
+                def sparse_fn(x, t=topo):
+                    return t.mix(x)
+            sparse_us = timed(jax.jit(sparse_fn), w, warmup=1, iters=5)
+            if n_dev <= dense_limit:
+                m = jnp.asarray(topo.dense_matrix())
+                dense_us = timed(
+                    jax.jit(lambda x, mm=m: jnp.einsum("ij,j...->i...", mm, x)),
+                    w, warmup=1, iters=5,
+                )
+            else:
+                dense_us = None
+            flops_sparse, bytes_sparse = _mix_flops_bytes(topo, n_dev, f)
+            flops_dense, bytes_dense = _dense_flops_bytes(n_dev, f)
+            n_solves = _n_solves(topo)
+            rows.append({
+                "n_devices": n_dev,
+                "topology": topo.name,
+                "mix_us_sparse": sparse_us,
+                "mix_us_dense": dense_us,
+                "mix_speedup": (dense_us / sparse_us) if dense_us else None,
+                "flops_sparse": flops_sparse,
+                "flops_dense": flops_dense,
+                "bytes_sparse": bytes_sparse,
+                "bytes_dense": bytes_dense,
+                "payloads": topo.payloads_per_round,
+                "solves": n_solves,
+                "solve_us_per_device_path": solve_all_us,
+                "solve_us_clustered_path": (
+                    solve_one_us if n_solves == 1 else
+                    solve_all_us * n_solves / n_dev
+                ),
+            })
+    return {
+        "n_hidden": n_hidden,
+        "n_features": n_features,
+        "payload_floats": f,
+        "backend": jax.default_backend(),
+        "device_grid": list(device_grid),
+        "rows": rows,
+    }
+
+
+def merge_bench_main(
+    device_grid: tuple[int, ...] = MERGE_GRID, out_path: str = "BENCH_fleet_merge.json"
+) -> list[str]:
+    report = merge_bench(device_grid=device_grid)
+    # persist the measurements BEFORE asserting on them, so a perf
+    # regression still leaves the artifact needed to debug it
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    lines = []
+    for r in report["rows"]:
+        dense = f"{r['mix_us_dense']:.1f}" if r["mix_us_dense"] else "n/a"
+        lines.append(
+            f"fleet_merge/{r['topology']}/d{r['n_devices']},"
+            f"{r['mix_us_sparse']:.1f},"
+            f"dense_us={dense};flops_ratio={r['flops_dense'] / r['flops_sparse']:.0f};"
+            f"bytes_ratio={r['bytes_dense'] / r['bytes_sparse']:.1f};"
+            f"solves={r['solves']}"
+        )
+        # sparsity must win in the accounting at every size...
+        assert r["flops_sparse"] < r["flops_dense"], r
+        assert r["bytes_sparse"] < r["bytes_dense"], r
+        # ...and on the wall-clock of the jitted XLA paths at scale
+        if r["mix_us_dense"] is not None and r["n_devices"] >= 1024:
+            assert r["mix_us_sparse"] < r["mix_us_dense"], r
+    lines.append(f"# merge-bench artifact → {out_path}")
+    return lines
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument(
         "--smoke", action="store_true",
-        help="tiny grid (8/16 devices, few steps) for CI smoke testing",
+        help="tiny grid (8/16 devices, few steps) for CI smoke testing; "
+             "also emits the merge-bench JSON artifact",
+    )
+    ap.add_argument(
+        "--merge-bench", action="store_true",
+        help="sparse-vs-dense merge microbenchmark (D up to 4096) + JSON artifact",
+    )
+    ap.add_argument(
+        "--merge-out", default="BENCH_fleet_merge.json",
+        help="path of the merge-bench JSON artifact",
     )
     args = ap.parse_args()
+    if args.merge_bench:
+        for line in merge_bench_main(MERGE_GRID, args.merge_out):
+            print(line)
+        print(f"# fleet_scale merge-bench ok — grid {MERGE_GRID}")
+        sys.exit(0)
     grid = (8, 16) if args.smoke else (64, 256)
     for line in main(device_grid=grid):
         print(line)
+    if args.smoke:
+        for line in merge_bench_main(MERGE_GRID_SMOKE, args.merge_out):
+            print(line)
     print(f"# fleet_scale ok — grid {grid}")

@@ -31,6 +31,7 @@ from repro.fleet import (
     all_to_all,
     fedavg_total_cost,
     fleet_merge,
+    fleet_merge_kernel,
     fleet_score,
     fleet_train,
     fleet_train_async,
@@ -102,6 +103,15 @@ def main() -> None:
     auc = float(np.mean([roc_auc(s, y_eval) for s in scores]))
     print(f"\nasync star, lags≤3 rounds ({lags.max_lag} max): "
           f"post-sync mean AUC = {auc:.3f}")
+
+    # the same merge through the Pallas kernel family (interpret=True on
+    # CPU; on TPU the banded path fuses neighbor-sum + solve in ONE
+    # kernel so merged (U, V) never round-trips through HBM)
+    topo = ring(n_dev, hops=2)
+    ref = fleet_merge(fleet0, topo, ridge=1e-3)
+    fused = fleet_merge_kernel(fleet0, topo, ridge=1e-3, interpret=True)
+    diff = float(np.max(np.abs(np.asarray(fused.beta) - np.asarray(ref.beta))))
+    print(f"fused Pallas ring merge vs XLA reference: max |Δβ| = {diff:.2e}")
 
 
 if __name__ == "__main__":

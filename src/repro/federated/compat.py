@@ -1,0 +1,39 @@
+"""jax version compatibility for shard_map manual-axes code.
+
+Two API shifts are bridged for every shard_map user in the repo
+(``federated.mesh_federation``, ``fleet.sharded``):
+
+- ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax``
+  proper in jax 0.6.
+- jax >= 0.6 tracks varying manual axes: psum outputs are
+  device-invariant and must be re-varied (``jax.lax.pvary``) before
+  flowing out through a sharded out_spec or back into a device-varying
+  scan carry. Older jax (<= 0.4.x) has neither ``jax.typeof`` nor
+  ``pvary`` and doesn't track variance, so the re-vary is a no-op.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+try:  # jax >= 0.6
+    from jax import shard_map as _shard_map_impl
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+HAS_VARYING_TYPES = hasattr(jax, "typeof") and hasattr(jax.lax, "pvary")
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def revary(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:
+    """Re-vary a device-invariant value (e.g. a psum output) over
+    ``axes``; identity on jax without varying-type tracking."""
+    if not HAS_VARYING_TYPES:
+        return x
+    missing = tuple(a for a in axes if a not in jax.typeof(x).vma)
+    return jax.lax.pvary(x, missing) if missing else x

@@ -23,25 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-try:  # jax >= 0.6
-    from jax import shard_map
-
-    def _shard_map(f, mesh, in_specs, out_specs):
-        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-except ImportError:  # pragma: no cover - older jax
-    from jax.experimental.shard_map import shard_map as _sm
-
-    def _shard_map(f, mesh, in_specs, out_specs):
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-
 from repro.core import UV, OSELMState, from_uv, oselm_step_k1, to_uv
-
-# jax >= 0.6 gives shard_map manual-axes varying types: psum outputs are
-# device-invariant and must be re-varied (pvary) before re-entering a
-# scan carry that was device-varying. Older jax (<= 0.4.x) has neither
-# jax.typeof nor jax.lax.pvary — and doesn't track varying manual axes,
-# so the re-vary is a no-op there.
-_HAS_VARYING_TYPES = hasattr(jax, "typeof") and hasattr(jax.lax, "pvary")
+from repro.federated.compat import revary, shard_map_compat as _shard_map
 
 
 def _stack_spec(axes: Sequence[str]) -> P:
@@ -129,14 +112,9 @@ def mesh_federated_train(
                 # as device-varying — restore the varying type (pvary is
                 # psum's dual under shard_map's manual-axes typing). On
                 # jax without varying-type tracking this reduces to a cast.
-                def _revary(n, o):
-                    n = jnp.asarray(n, o.dtype)
-                    if not _HAS_VARYING_TYPES:
-                        return n
-                    missing = tuple(a for a in axes if a not in jax.typeof(n).vma)
-                    return jax.lax.pvary(n, missing) if missing else n
-
-                s2 = jax.tree.map(_revary, s2, s)
+                s2 = jax.tree.map(
+                    lambda n, o: revary(jnp.asarray(n, o.dtype), axes), s2, s
+                )
                 return s2, None
 
             local, _ = jax.lax.scan(chunk_step, local, chunks)

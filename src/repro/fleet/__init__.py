@@ -8,9 +8,13 @@ for repeated synchronization under realistic payload lag, a non-IID
 stream partitioner with drift injection, and per-round communication
 accounting.
 
-This is the substrate for the ROADMAP's scaling line: sharded fleets
-over mesh axes, Pallas segment-sum merge kernels, and serve-loop
-integration all build on the stacked-(U, V) layout defined here.
+The ROADMAP's scaling line is built in: sparse topology mixing that
+never forms the D×D mask (``topology``), the Pallas banded/segment
+merge-kernel path fused with the Eq. 8 solve (``fleet_merge_kernel`` /
+``repro.kernels.topology_merge``), and mesh-sharded merges that lower
+to a psum of O(clusters) segment sums per shard (``sharded``).
+Serve-loop integration still builds on the stacked-(U, V) layout
+defined here.
 """
 from repro.fleet.comm import (
     RoundCost,
@@ -23,12 +27,14 @@ from repro.fleet.fleet import (
     device_state,
     fleet_from_uv,
     fleet_merge,
+    fleet_merge_kernel,
     fleet_score,
     fleet_to_uv,
     fleet_train,
     fleet_train_rounds,
     init_fleet,
 )
+from repro.fleet.sharded import fleet_merge_sharded
 from repro.fleet.partition import (
     DriftEvent,
     FleetStreams,
@@ -49,8 +55,10 @@ from repro.fleet.topology import (
 __all__ = [
     "RoundCost", "fedavg_total_cost", "model_nbytes", "payload_nbytes",
     "topology_round_cost",
-    "device_state", "fleet_from_uv", "fleet_merge", "fleet_score",
-    "fleet_to_uv", "fleet_train", "fleet_train_rounds", "init_fleet",
+    "device_state", "fleet_from_uv", "fleet_merge", "fleet_merge_kernel",
+    "fleet_merge_sharded",
+    "fleet_to_uv", "fleet_score", "fleet_train", "fleet_train_rounds",
+    "init_fleet",
     "DriftEvent", "FleetStreams", "make_fleet_streams", "random_drift_schedule",
     "StalenessSchedule", "fleet_train_async",
     "TOPOLOGIES", "Topology", "all_to_all", "hierarchical", "make_topology",

@@ -13,6 +13,17 @@ cooperative update applies Eq. 8 restricted to the topology's neighbor
 set. An all-to-all topology reproduces `cooperative_update` /
 `mesh_cooperative_update` bit-for-bit (up to f32 summation order).
 
+The merge is structure-aware end to end: sparse topologies never form
+the D×D mixing matrix (``Topology.mix``), and the §4.2 step-5 solve
+runs once per *equivalence class* of merged models — one solve for a
+fully-connected merge, one per cluster for isolated hierarchical
+clusters, per device only when the neighbor sets genuinely differ
+(ring). ``fleet_merge_kernel`` runs the same dispatch through the
+Pallas kernel family in ``repro.kernels.topology_merge``, including the
+fully fused banded mix+solve. ``fleet_train_rounds`` is a single
+compile-once ``lax.scan`` over round chunks (buffers donated on
+accelerator backends), not a retracing Python loop.
+
 API sketch::
 
     fleet = init_fleet(key, n_devices=256, n_features=225, n_hidden=32,
@@ -23,6 +34,7 @@ API sketch::
 """
 from __future__ import annotations
 
+import logging
 from functools import partial
 
 import jax
@@ -38,7 +50,10 @@ from repro.core import (
     oselm_step_k1,
     to_uv,
 )
+from repro.core.elm import invert_u, solve_beta
 from repro.fleet.topology import Topology
+
+log = logging.getLogger(__name__)
 
 
 def init_fleet(
@@ -74,11 +89,7 @@ def init_fleet(
     return jax.vmap(one)(jnp.asarray(x_init))
 
 
-@jax.jit
-def fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
-    """Every device sequentially trains (k=1 autoencoder steps) on its
-    own stream. ``streams``: (D, T, n_features)."""
-
+def _fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
     def train_one(st: OSELMState, xs: jnp.ndarray) -> OSELMState:
         def step(s, x):
             return oselm_step_k1(s, x, x), None
@@ -86,7 +97,14 @@ def fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
         out, _ = jax.lax.scan(step, st, xs)
         return out
 
-    return jax.vmap(train_one)(states, jnp.asarray(streams))
+    return jax.vmap(train_one)(states, streams)
+
+
+@jax.jit
+def fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
+    """Every device sequentially trains (k=1 autoencoder steps) on its
+    own stream. ``streams``: (D, T, n_features)."""
+    return _fleet_train(states, jnp.asarray(streams))
 
 
 def fleet_to_uv(states: OSELMState, *, ridge: float = 0.0) -> UV:
@@ -100,21 +118,142 @@ def fleet_from_uv(states: OSELMState, uv: UV, *, ridge: float = 0.0) -> OSELMSta
     return jax.vmap(partial(from_uv, ridge=ridge))(states, uv)
 
 
+def _solve_uv(u: jnp.ndarray, v: jnp.ndarray, ridge: float):
+    """One §4.2 step-5 solve: P = (U+εI)⁻¹, β = (U+εI)⁻¹V."""
+    return invert_u(u, ridge=ridge), solve_beta(u, v, ridge=ridge)
+
+
+def _bcast(x: jnp.ndarray, n_devices: int) -> jnp.ndarray:
+    return jnp.broadcast_to(x[None], (n_devices,) + x.shape)
+
+
+def _merge_body(states: OSELMState, topology: Topology, ridge: float) -> OSELMState:
+    """Structure-aware Eq. 8 merge: mix sparsely, then solve once per
+    equivalence class of merged (U, V) — fully-connected merges produce
+    one global model (1 solve, broadcast), isolated clusters one model
+    per cluster (C solves, gather), and only genuinely per-device
+    neighbor sets (open ring, custom dense masks) pay D solves."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    n_dev = topology.n_devices
+
+    if topology.kind == "segment":
+        cids = jnp.asarray(topology.cluster_ids)
+        su = jax.ops.segment_sum(uv.u, cids, num_segments=topology.n_clusters)
+        sv = jax.ops.segment_sum(uv.v, cids, num_segments=topology.n_clusters)
+        if topology.head_exchange:
+            p, beta = _solve_uv(su.sum(0), sv.sum(0), ridge)
+            return states.replace(beta=_bcast(beta, n_dev), p=_bcast(p, n_dev))
+        pc, betac = jax.vmap(partial(_solve_uv, ridge=ridge))(su, sv)
+        return states.replace(beta=betac[cids], p=pc[cids])
+
+    if topology.is_fully_connected:  # closed ring / all-ones dense mask
+        p, beta = _solve_uv(uv.u.sum(0), uv.v.sum(0), ridge)
+        return states.replace(beta=_bcast(beta, n_dev), p=_bcast(p, n_dev))
+
+    mixed = UV(u=topology.mix(uv.u), v=topology.mix(uv.v))
+    return fleet_from_uv(states, mixed, ridge=ridge)
+
+
 @partial(jax.jit, static_argnames=("topology", "ridge"))
 def fleet_merge(
     states: OSELMState, topology: Topology, *, ridge: float = 0.0
 ) -> OSELMState:
     """Topology-aware cooperative update: each device's merged (U, V) is
     the Eq. 8 sum over its neighbor set (self included)."""
+    return _merge_body(states, topology, ridge)
+
+
+@partial(jax.jit, static_argnames=("topology", "ridge", "interpret"))
+def fleet_merge_kernel(
+    states: OSELMState,
+    topology: Topology,
+    *,
+    ridge: float = 0.0,
+    interpret: bool = True,
+) -> OSELMState:
+    """``fleet_merge`` on the Pallas merge-kernel family: the stacked
+    [U | V] payload is mixed by the sparsity-aware kernels and solved by
+    the fused Gauss-Jordan kernel (``repro.kernels.topology_merge``);
+    on the open ring the mix and solve are ONE kernel, so merged (U, V)
+    never round-trips through HBM. ``interpret=True`` runs on CPU;
+    pass False on TPU to lower via Mosaic."""
+    from repro.kernels.topology_merge import (
+        banded_merge_solve,
+        dense_mix,
+        from_uv_solve,
+        segment_sum_mix,
+    )
+
     uv = fleet_to_uv(states, ridge=ridge)
-    mixed = UV(u=topology.mix(uv.u), v=topology.mix(uv.v))
-    return fleet_from_uv(states, mixed, ridge=ridge)
+    n = uv.u.shape[1]
+    n_dev = topology.n_devices
+    w = jnp.concatenate([uv.u, uv.v], axis=2)  # stacked [U | V] payloads
+
+    if topology.kind == "banded" and not topology.band_closed:
+        p, beta = banded_merge_solve(w, topology.hops, ridge=ridge, interpret=interpret)
+        return states.replace(beta=beta, p=p)
+
+    if topology.kind == "segment":
+        sums = segment_sum_mix(
+            w, topology.cluster_ids, topology.n_clusters, interpret=interpret
+        )
+        if topology.head_exchange:
+            total = sums.sum(0, keepdims=True)
+            p, beta = from_uv_solve(
+                total[:, :, :n], total[:, :, n:], ridge=ridge, interpret=interpret
+            )
+            return states.replace(
+                beta=_bcast(beta[0], n_dev), p=_bcast(p[0], n_dev)
+            )
+        cids = jnp.asarray(topology.cluster_ids)
+        pc, betac = from_uv_solve(
+            sums[:, :, :n], sums[:, :, n:], ridge=ridge, interpret=interpret
+        )
+        return states.replace(beta=betac[cids], p=pc[cids])
+
+    if topology.is_fully_connected:  # closed ring / all-ones dense mask
+        total = w.sum(0, keepdims=True)
+        p, beta = from_uv_solve(
+            total[:, :, :n], total[:, :, n:], ridge=ridge, interpret=interpret
+        )
+        return states.replace(beta=_bcast(beta[0], n_dev), p=_bcast(p[0], n_dev))
+
+    mixed = dense_mix(w, topology.dense_matrix(), interpret=interpret)
+    p, beta = from_uv_solve(
+        mixed[:, :, :n], mixed[:, :, n:], ridge=ridge, interpret=interpret
+    )
+    return states.replace(beta=beta, p=p)
 
 
 @jax.jit
 def fleet_score(states: OSELMState, x: jnp.ndarray) -> jnp.ndarray:
     """Per-device anomaly scores on shared eval data: (D, k)."""
     return jax.vmap(lambda s: ae_score(s, x))(states)
+
+
+def _rounds_body(
+    states: OSELMState, chunks: jnp.ndarray, topology: Topology, ridge: float
+) -> OSELMState:
+    """Compile-once train→merge loop: one ``lax.scan`` over the round
+    axis (chunks: (rounds, D, per, feat)) instead of a Python loop
+    re-dispatching two jits per round."""
+
+    def body(st, chunk):
+        st = _fleet_train(st, chunk)
+        return _merge_body(st, topology, ridge), None
+
+    out, _ = jax.lax.scan(body, states, chunks)
+    return out
+
+
+_ROUNDS_SCAN = {
+    # donate=True lets XLA reuse the input fleet buffers for the scan
+    # carry (the CPU backend ignores donation, with a warning)
+    True: partial(
+        jax.jit, static_argnames=("topology", "ridge"), donate_argnums=(0,)
+    )(_rounds_body),
+    False: partial(jax.jit, static_argnames=("topology", "ridge"))(_rounds_body),
+}
 
 
 def fleet_train_rounds(
@@ -124,22 +263,42 @@ def fleet_train_rounds(
     *,
     rounds: int,
     ridge: float = 0.0,
+    donate: bool = False,
 ) -> OSELMState:
     """The paper's "repeatedly applied to synchronize" mode at fleet
     scale: chunk each stream into ``rounds`` pieces, train a chunk,
     merge over the topology, repeat. Synchronous (no staleness) —
     see ``repro.fleet.staleness.fleet_train_async`` for the lagged
-    variant."""
+    variant.
+
+    The whole loop is a single jitted ``lax.scan`` (compiled once per
+    (shape, topology)). Pass ``donate=True`` on accelerator backends to
+    donate the input state buffers to the scan — halves peak state
+    memory, but invalidates the caller's ``states`` pytree.
+
+    .. note:: When ``steps % rounds != 0`` the tail ``steps % rounds``
+       samples of every stream are **dropped** (each round trains on
+       exactly ``steps // rounds`` samples); a warning is logged when
+       that truncation is nonzero.
+    """
     streams = jnp.asarray(streams)
     n_dev, steps, feat = streams.shape
     if not 1 <= rounds <= steps:
         raise ValueError(f"need 1 <= rounds={rounds} <= steps={steps}")
     per = steps // rounds
-    chunks = streams[:, : rounds * per].reshape(n_dev, rounds, per, feat)
-    for r in range(rounds):
-        states = fleet_train(states, chunks[:, r])
-        states = fleet_merge(states, topology, ridge=ridge)
-    return states
+    tail = steps - rounds * per
+    if tail:
+        log.warning(
+            "fleet_train_rounds: steps=%d not divisible by rounds=%d — "
+            "dropping the tail %d samples of every device stream",
+            steps, rounds, tail,
+        )
+    chunks = (
+        streams[:, : rounds * per]
+        .reshape(n_dev, rounds, per, feat)
+        .transpose(1, 0, 2, 3)
+    )
+    return _ROUNDS_SCAN[donate](states, chunks, topology, ridge)
 
 
 def device_state(states: OSELMState, idx: int) -> OSELMState:

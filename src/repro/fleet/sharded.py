@@ -1,0 +1,97 @@
+"""Sharded fleet merges: psum-of-segment-sums over mesh axes.
+
+`repro.fleet` simulates the whole fleet as one stacked pytree;
+`repro.federated.mesh_federation` runs one device per mesh shard. This
+module combines them: the stacked device axis is sharded across mesh
+devices (``repro.launch.sharding.fleet_shardings``), each shard
+segment-sums its *local* devices' (U, V) into per-cluster partials, and
+ONE ``jax.lax.psum`` of the (n_clusters, Ñ, Ñ+m) partials completes
+Eq. 8 globally — the per-shard collective is O(clusters), never
+O(devices), which is what lets a 10k-device fleet merge over a handful
+of TPU shards without all-gathering 10k payloads.
+
+Supported merge structures are the ones whose result is cluster-wise
+constant (star, hierarchical, all-to-all, closed ring): those are
+exactly the topologies whose collective compresses to cluster
+aggregates. The open ring's neighbor sums straddle shard boundaries;
+it stays on the single-process ``fleet_merge`` / halo-exchange future
+work.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import OSELMState
+from repro.federated.compat import revary, shard_map_compat as _shard_map
+from repro.fleet.fleet import _bcast, _solve_uv, fleet_to_uv
+from repro.fleet.topology import Topology
+
+
+def _merge_cids(topology: Topology) -> tuple[np.ndarray, int, bool]:
+    """(cluster_ids, n_clusters, cluster_isolated) for the topologies
+    whose merged model is cluster-wise constant."""
+    if topology.kind == "segment":
+        return (
+            np.asarray(topology.cluster_ids, np.int32),
+            topology.n_clusters,
+            not topology.head_exchange,
+        )
+    if topology.is_fully_connected:  # all_to_all / closed ring: one cluster
+        return np.zeros(topology.n_devices, np.int32), 1, False
+    raise NotImplementedError(
+        f"sharded merge needs a cluster-wise-constant topology; "
+        f"{topology.name!r} (kind={topology.kind!r}) mixes per-device "
+        "neighbor sets across shard boundaries"
+    )
+
+
+def fleet_merge_sharded(
+    states: OSELMState,
+    topology: Topology,
+    mesh: Mesh,
+    axes: Sequence[str] = ("data",),
+    *,
+    ridge: float = 0.0,
+) -> OSELMState:
+    """Cooperative update of a mesh-sharded stacked fleet.
+
+    ``states`` leaves carry a leading device axis sharded over ``axes``
+    (shard it with ``repro.launch.sharding.shard_fleet``). Each shard
+    computes local per-cluster (U, V) partial sums, one psum of the
+    O(clusters)-sized partials completes the Eq. 8 sum, and each shard
+    solves + broadcasts locally. Returns the merged fleet with the same
+    sharding.
+    """
+    cids, n_clusters, isolated = _merge_cids(topology)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if topology.n_devices % n_shards:
+        raise ValueError(
+            f"n_devices={topology.n_devices} not divisible by {n_shards} shards"
+        )
+    spec = P(tuple(axes))
+
+    def body(st: OSELMState, cids_local: jnp.ndarray) -> OSELMState:
+        n_local = cids_local.shape[0]
+        uv = fleet_to_uv(st, ridge=ridge)  # this shard's devices only
+        su = jax.ops.segment_sum(uv.u, cids_local, num_segments=n_clusters)
+        sv = jax.ops.segment_sum(uv.v, cids_local, num_segments=n_clusters)
+        su = jax.lax.psum(su, tuple(axes))  # O(clusters) per-shard collective
+        sv = jax.lax.psum(sv, tuple(axes))
+        if isolated:
+            pc, betac = jax.vmap(lambda u, v: _solve_uv(u, v, ridge))(su, sv)
+            p, beta = pc[cids_local], betac[cids_local]
+        else:
+            p1, beta1 = _solve_uv(su.sum(0), sv.sum(0), ridge)
+            p, beta = _bcast(p1, n_local), _bcast(beta1, n_local)
+        return st.replace(
+            beta=revary(beta.astype(st.beta.dtype), axes),
+            p=revary(p.astype(st.p.dtype), axes),
+        )
+
+    fn = _shard_map(body, mesh, in_specs=(spec, spec), out_specs=spec)
+    return jax.jit(fn)(states, jnp.asarray(cids))

@@ -23,10 +23,23 @@ Four topologies are provided, spanning the related-work design space:
   equals all-to-all at a fraction of the traffic; without it, clusters
   stay isolated (block-diagonal M).
 
-``Topology.mix`` applies M to any stacked (D, ...) array — for ring and
-all-to-all via a dense einsum, for hierarchical via
-``jax.ops.segment_sum`` over the cluster ids (the sparse path that
-later sharded-fleet / Pallas work targets).
+``Topology.mix`` applies M to any stacked (D, ...) array **without ever
+forming M** on the sparse kinds — this is no longer future work:
+
+- ``kind="banded"`` (ring): a circular banded neighbor-sum,
+  Σ_{o=-hops..hops} roll(x, o) — O(D·hops·F) instead of the dense
+  einsum's O(D²·F); a ring that touches 2 neighbors costs 2 adds/row.
+- ``kind="segment"`` (star / hierarchical): ``jax.ops.segment_sum``
+  over the precomputed ``n_clusters`` cluster ids, plus an O(clusters)
+  head exchange and broadcast.
+- ``kind="dense"`` (all_to_all and custom masks): the D×D einsum —
+  kept as the measured baseline the sparse paths are benchmarked
+  against (``benchmarks/fleet_scale.py --merge-bench``).
+
+The same sparsity structure is exploited by the Pallas kernel family in
+``repro.kernels.topology_merge`` (banded gather / segment-sum kernels
+fused with the Eq. 8 solve) and by the sharded psum-of-segment-sums
+merge in ``repro.fleet.sharded``.
 
 Communication accounting lives in ``repro.fleet.comm``; each topology
 reports its per-round payload transmission count via
@@ -47,37 +60,55 @@ class Topology:                                # a Topology can be a jit static 
 
     ``kind`` selects the mixing implementation:
       - "dense": ``matrix`` (D, D) 0/1 mask, einsum neighbor-sum
+      - "banded": circular ±``hops`` neighbor-sum (ring); M is never
+        materialized
       - "segment": two-tier segment-sum over ``cluster_ids`` (+ head
-        exchange when ``head_exchange``)
+        exchange when ``head_exchange``); ``n_clusters`` is frozen at
+        construction so ``mix`` never re-derives it from the ids
     """
 
     name: str
     n_devices: int
-    kind: str  # "dense" | "segment"
+    kind: str  # "dense" | "banded" | "segment"
     matrix: np.ndarray | None = None          # (D, D) float32, incl. diagonal
     cluster_ids: np.ndarray | None = None     # (D,) int32, for kind="segment"
+    n_clusters: int | None = None             # precomputed segment count
+    hops: int | None = None                   # for kind="banded"
     head_exchange: bool = True
     payloads_per_round: int = 0               # payload transmissions per merge round
 
     def dense_matrix(self) -> np.ndarray:
         """The equivalent (D, D) mixing mask, whatever the kind — used by
-        the async-staleness path and by tests cross-checking the
-        segment-sum implementation."""
+        the async-staleness path and by tests cross-checking the sparse
+        implementations."""
         if self.matrix is not None:
             return self.matrix
+        if self.kind == "banded":
+            assert self.hops is not None
+            idx = np.arange(self.n_devices)
+            dist = np.abs(idx[:, None] - idx[None, :])
+            circ = np.minimum(dist, self.n_devices - dist)
+            return (circ <= self.hops).astype(np.float32)
         assert self.cluster_ids is not None
         same = self.cluster_ids[:, None] == self.cluster_ids[None, :]
         m = np.ones_like(same, dtype=np.float32) if self.head_exchange \
             else same.astype(np.float32)
         return m
 
+    @property
+    def band_closed(self) -> bool:
+        """A banded ring whose ±hops window already covers every device
+        (equivalent to all-to-all; the banded sum would double count)."""
+        return self.kind == "banded" and 2 * self.hops + 1 >= self.n_devices
+
     def mix(self, stacked: jnp.ndarray) -> jnp.ndarray:
-        """Neighbor-sum a stacked (D, ...) array: out[i] = Σⱼ Mᵢⱼ x[j]."""
+        """Neighbor-sum a stacked (D, ...) array: out[i] = Σⱼ Mᵢⱼ x[j].
+
+        Sparse kinds never materialize M (see module docstring)."""
         if self.kind == "segment":
             cids = jnp.asarray(self.cluster_ids)
-            n_clusters = int(self.cluster_ids.max()) + 1
             cluster_sums = jax.ops.segment_sum(
-                stacked, cids, num_segments=n_clusters
+                stacked, cids, num_segments=self.n_clusters
             )
             if self.head_exchange:
                 # heads exchange cluster aggregates → every cluster ends
@@ -85,11 +116,23 @@ class Topology:                                # a Topology can be a jit static 
                 total = jnp.sum(cluster_sums, axis=0)
                 return jnp.broadcast_to(total[None], stacked.shape)
             return cluster_sums[cids]
+        if self.kind == "banded":
+            if self.band_closed:  # full mesh: one sum + broadcast
+                total = jnp.sum(stacked, axis=0)
+                return jnp.broadcast_to(total[None], stacked.shape)
+            return sum(
+                jnp.roll(stacked, o, axis=0)
+                for o in range(-self.hops, self.hops + 1)
+            )
         m = jnp.asarray(self.matrix)
         return jnp.einsum("ij,j...->i...", m, stacked)
 
     @property
     def is_fully_connected(self) -> bool:
+        if self.kind == "segment":
+            return self.head_exchange or self.n_clusters == 1
+        if self.kind == "banded":
+            return self.band_closed
         return bool((self.dense_matrix() > 0).all())
 
 
@@ -117,6 +160,7 @@ def star(n_devices: int) -> Topology:
         n_devices=n_devices,
         kind="segment",
         cluster_ids=np.zeros(n_devices, dtype=np.int32),
+        n_clusters=1,
         head_exchange=True,
         payloads_per_round=2 * (n_devices - 1),
     )
@@ -124,17 +168,15 @@ def star(n_devices: int) -> Topology:
 
 def ring(n_devices: int, hops: int = 1) -> Topology:
     """Gossip ring: device i merges with its ±1..hops ring neighbors.
-    With hops ≥ ⌈(D−1)/2⌉ the ring closes into a full mesh."""
-    idx = np.arange(n_devices)
-    dist = np.abs(idx[:, None] - idx[None, :])
-    circ = np.minimum(dist, n_devices - dist)
-    m = (circ <= hops).astype(np.float32)
-    degree = int(m.sum(axis=1)[0]) - 1  # neighbors actually sent to
+    With hops ≥ ⌈(D−1)/2⌉ the ring closes into a full mesh. The mixing
+    matrix is never materialized (kind="banded"); ``dense_matrix`` can
+    still reconstruct it for cross-checks and the staleness model."""
+    degree = min(2 * hops, n_devices - 1)  # neighbors actually sent to
     return Topology(
         name=f"ring{hops}" if hops != 1 else "ring",
         n_devices=n_devices,
-        kind="dense",
-        matrix=m,
+        kind="banded",
+        hops=hops,
         payloads_per_round=n_devices * degree,
     )
 
@@ -159,6 +201,7 @@ def hierarchical(
         n_devices=n_devices,
         kind="segment",
         cluster_ids=cluster_ids,
+        n_clusters=n_clusters,
         head_exchange=head_exchange,
         payloads_per_round=2 * n_members_traffic + head_traffic,
     )

@@ -14,6 +14,15 @@ from repro.kernels.ops import (
     uv_accum,
     uv_from_state_kernel,
 )
+from repro.kernels.topology_merge import (
+    banded_merge_solve,
+    banded_mix,
+    dense_mix,
+    from_uv_solve,
+    segment_broadcast,
+    segment_sum_mix,
+    topology_mix,
+)
 
 __all__ = [
     "flash_attention",
@@ -24,4 +33,11 @@ __all__ = [
     "rank1_add",
     "uv_accum",
     "uv_from_state_kernel",
+    "banded_merge_solve",
+    "banded_mix",
+    "dense_mix",
+    "from_uv_solve",
+    "segment_broadcast",
+    "segment_sum_mix",
+    "topology_mix",
 ]

@@ -107,6 +107,26 @@ def param_shardings(params: PyTree, mesh: Mesh) -> PyTree:
     )
 
 
+def fleet_stack_spec(axes: tuple[str, ...] = ("data",)) -> P:
+    """PartitionSpec sharding a stacked fleet's leading device axis over
+    the federation mesh axes (all trailing dims replicated)."""
+    return P(tuple(axes))
+
+
+def fleet_shardings(states: PyTree, mesh: Mesh, axes: tuple[str, ...] = ("data",)) -> PyTree:
+    """NamedShardings for a stacked ``OSELMState`` fleet: every leaf's
+    leading device axis lands on ``axes``; used with
+    ``repro.fleet.sharded.fleet_merge_sharded`` so the topology merge
+    lowers to a psum of O(clusters) segment sums per shard."""
+    sharding = NamedSharding(mesh, fleet_stack_spec(axes))
+    return jax.tree.map(lambda _: sharding, states)
+
+
+def shard_fleet(states: PyTree, mesh: Mesh, axes: tuple[str, ...] = ("data",)) -> PyTree:
+    """Place a stacked fleet on the mesh, device axis sharded over ``axes``."""
+    return jax.device_put(states, fleet_shardings(states, mesh, axes))
+
+
 def opt_state_specs(opt_state: PyTree, params_specs_tree: PyTree) -> PyTree:
     """Adam moments follow their parameter's sharding; step is replicated."""
     from repro.optim.optimizers import OptState

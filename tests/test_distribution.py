@@ -189,3 +189,43 @@ def test_mesh_federation_subprocess():
     )
     assert out.returncode == 0, out.stderr[-2000:]
     assert "RESULT" in out.stdout
+
+
+_SHARDED_FLEET_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.fleet import (init_fleet, fleet_train, fleet_merge, fleet_merge_sharded,
+                         star, hierarchical, all_to_all)
+from repro.launch.sharding import shard_fleet
+
+mesh = jax.make_mesh((8,), ("data",))
+D, H, F = 32, 8, 24
+key = jax.random.PRNGKey(0)
+x_init = jax.random.uniform(key, (D, 2 * H, F))
+fleet = init_fleet(key, D, F, H, x_init, activation="identity", ridge=1e-3)
+fleet = fleet_train(fleet, jax.random.uniform(jax.random.PRNGKey(1), (D, 16, F)))
+fleet_s = shard_fleet(fleet, mesh)
+worst = 0.0
+for topo in (all_to_all(D), star(D), hierarchical(D, 4),
+             hierarchical(D, 4, head_exchange=False)):
+    ref = fleet_merge(fleet, topo, ridge=1e-3)
+    got = fleet_merge_sharded(fleet_s, topo, mesh, ("data",), ridge=1e-3)
+    worst = max(worst, float(jnp.max(jnp.abs(np.asarray(got.beta) - np.asarray(ref.beta)))))
+print("RESULT", worst)
+assert worst < 1e-4
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fleet_merge_subprocess():
+    """psum-of-segment-sums fleet merge across 8 real host shards equals
+    the single-process fleet_merge (O(clusters) collective payloads)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_FLEET_SCRIPT], env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RESULT" in out.stdout
