@@ -20,6 +20,7 @@ BENCHES = [
     ("convergence", "paper Fig. 18 — merge vs sequential training"),
     ("mesh_merge", "ours — psum cooperative update on a device mesh"),
     ("fleet_scale", "ours — fleet simulator: devices × topology grid"),
+    ("serve_runtime", "ours — resident runtime soak: drift detection + gated merges"),
     ("kernel_bench", "ours — Pallas kernel micro-bench (interpret)"),
     ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),
     ("roofline_report", "ours — dry-run roofline artifact summary"),

@@ -1,0 +1,304 @@
+"""Resident serve-runtime soak benchmark — drift, gating, SLO.
+
+Drives a D=256 resident fleet (``repro.runtime.FleetRuntime``) through
+hundreds of serving ticks of non-IID HAR streams with injected concept
+drift (``random_drift_schedule`` targeting a *held-out* pattern), twice
+over identical streams and identical initial fleets:
+
+  - **gated**   — the merge governor quarantines detector-flagged
+    devices out of every cooperative update (re-admission by
+    hysteresis),
+  - **ungated** — the no-gating baseline: every device merges every
+    round, drifted or not.
+
+Reported (and persisted to ``BENCH_serve_runtime.json``):
+
+  - sustained tick throughput (ingest + detect + govern),
+  - merge latency (wall-clock of the admitted masked merges),
+  - detection delay in ticks (flag tick − drift tick, per event),
+    plus missed detections and false positives,
+  - post-merge anomaly ROC-AUC of the *clean* (never-drifted) devices,
+    where the anomaly class IS the drifted concept — the number that
+    quantifies the ROADMAP's drift-adaptive-selection claim.
+
+Asserted claims:
+  - the tick loop is a compile-once path: no jitted function owned by
+    either runtime traced more than once across the whole soak
+    (``assert_compile_once``),
+  - every injected drift is detected in the gated run, with zero false
+    positives on stationary devices,
+  - gated clean-device AUC strictly beats the no-gating baseline (the
+    quarantine protects the fleet from the drifted concept) and stays
+    above 0.9,
+  - the comm-budget SLO works: a deliberately starved budget defers
+    merges (exercised on a small side fleet).
+
+    PYTHONPATH=src python benchmarks/serve_runtime.py [--smoke]
+
+``--smoke`` IS the acceptance configuration (D=256, 220 ticks) — the
+full run just soaks longer.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/serve_runtime.py` from repo root
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import normalized_dataset
+from repro.data import AnomalyDataset
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays, train_test_split
+from repro.fleet import (
+    fleet_score,
+    init_fleet,
+    make_fleet_streams,
+    random_drift_schedule,
+    ring,
+)
+from repro.runtime import (
+    DetectorConfig,
+    FleetRuntime,
+    GovernorConfig,
+    RuntimeConfig,
+    TickFeed,
+)
+
+N_DEVICES = 256        # acceptance: a D=256 resident fleet
+N_HIDDEN = 16
+BATCH = 2              # samples ingested per device per tick
+TICKS_SMOKE = 220      # acceptance: >= 200 ticks with injected drift
+TICKS_FULL = 400
+MERGE_EVERY = 20
+KEEP = 2               # trained patterns; drift targets pattern KEEP (held out)
+DRIFT_FRAC = 0.25
+RIDGE = 1e-3
+
+
+def _class_subset(ds: AnomalyDataset, n: int) -> AnomalyDataset:
+    mask = ds.y < n
+    return AnomalyDataset(ds.name, ds.x[mask], ds.y[mask], ds.class_names[:n])
+
+
+def build_scenario(n_devices: int, ticks: int, *, seed: int = 0):
+    """Streams + eval arrays for the drift-to-held-out-concept soak:
+    devices home on patterns {0..KEEP−1}, a DRIFT_FRAC fraction drifts
+    mid-stream to pattern KEEP, and the eval protocol labels exactly
+    that pattern anomalous."""
+    ds = normalized_dataset("har", seed=seed, samples_per_class=150)
+    train, test = train_test_split(ds, 0.8, seed=seed)
+    train_k = _class_subset(train, KEEP + 1)
+    test_k = _class_subset(test, KEEP + 1)
+    steps = ticks * BATCH
+    drift = random_drift_schedule(
+        n_devices, steps, KEEP + 1, frac=DRIFT_FRAC, seed=seed + 1,
+        home_classes=KEEP, targets=(KEEP,),
+    )
+    fs = make_fleet_streams(
+        train_k, n_devices, steps, n_init=2 * N_HIDDEN, drift=drift,
+        seed=seed, n_assign=KEEP,
+    )
+    x_eval, y_eval = anomaly_eval_arrays(
+        test_k, list(range(KEEP)), anomaly_ratio=0.3, seed=seed
+    )
+    return ds, fs, jnp.asarray(x_eval), y_eval
+
+
+def run_soak(
+    fs, x_eval, y_eval, n_features: int, *, gate: bool, seed: int = 0
+) -> dict:
+    """One resident soak over prepared streams; returns its metrics."""
+    n_devices = fs.n_devices
+    fleet = init_fleet(
+        jax.random.PRNGKey(seed), n_devices, n_features, N_HIDDEN, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    cfg = RuntimeConfig(
+        topology=ring(n_devices, hops=2),
+        ridge=RIDGE,
+        detector=DetectorConfig(),
+        governor=GovernorConfig(merge_every=MERGE_EVERY),
+        gate_merges=gate,
+    )
+    rt = FleetRuntime(fleet, cfg)
+    feed = TickFeed(fs, BATCH)
+
+    merge_lat = []
+    t0 = time.perf_counter()
+    for t in range(feed.n_ticks):
+        rep = rt.tick(feed.tick_batch(t))
+        if rep.merge_seconds is not None:
+            merge_lat.append(rep.merge_seconds)
+    wall = time.perf_counter() - t0
+
+    # no retracing across the whole soak — the acceptance's jit-stats gate
+    cache_sizes = rt.assert_compile_once()
+
+    gt = feed.drift_ticks()
+    flags_by_dev: dict[int, list[int]] = {}
+    for tick, dev in rt.detections:
+        flags_by_dev.setdefault(dev, []).append(tick)
+    delays, missed, false_pos = [], [], []
+    for dev, ticks_flagged in flags_by_dev.items():
+        # a flag BEFORE the device's scheduled drift is a false positive
+        # (it fired on a stationary stream), not a negative-delay detection
+        if dev not in gt or min(ticks_flagged) < gt[dev]:
+            false_pos.append(dev)
+    for dev, t0 in gt.items():
+        post = [t for t in flags_by_dev.get(dev, []) if t >= t0]
+        if post:
+            delays.append(min(post) - t0)
+        else:
+            missed.append(dev)
+    missed, false_pos = sorted(missed), sorted(false_pos)
+
+    clean = [d for d in range(n_devices) if d not in gt]
+    scores = np.asarray(fleet_score(rt.states, x_eval))
+    aucs = [roc_auc(scores[d], y_eval) for d in clean]
+
+    return {
+        "gated": gate,
+        "n_devices": n_devices,
+        "ticks": feed.n_ticks,
+        "ticks_per_sec": feed.n_ticks / wall,
+        "wall_seconds": wall,
+        "merges": rt.governor.state.merges,
+        "merge_latency_us_mean": float(np.mean(merge_lat) * 1e6) if merge_lat else None,
+        "bytes_spent": rt.governor.state.bytes_spent,
+        "n_drift_events": len(gt),
+        "detection_delay_ticks_mean": float(np.mean(delays)) if delays else None,
+        "detection_delay_ticks_max": int(np.max(delays)) if delays else None,
+        "missed_detections": missed,
+        "false_positives": false_pos,
+        "clean_auc_mean": float(np.mean(aucs)),
+        "clean_auc_min": float(np.min(aucs)),
+        "jit_cache_sizes": cache_sizes,
+    }
+
+
+def run_slo_probe(n_devices: int = 64, ticks: int = 96, *, seed: int = 0) -> dict:
+    """Small side fleet proving the comm-budget SLO defers merges: the
+    budget affords roughly every other candidate round."""
+    ds, fs, x_eval, y_eval = build_scenario(n_devices, ticks, seed=seed)
+    fleet = init_fleet(
+        jax.random.PRNGKey(seed), n_devices, ds.n_features, N_HIDDEN, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    topo = ring(n_devices, hops=2)
+    from repro.fleet import topology_round_cost
+
+    round_bytes = topology_round_cost(topo, N_HIDDEN, ds.n_features).bytes_total
+    budget = 0.5 * round_bytes / MERGE_EVERY  # affords ~every other candidate
+    cfg = RuntimeConfig(
+        topology=topo, ridge=RIDGE,
+        governor=GovernorConfig(
+            merge_every=MERGE_EVERY, budget_bytes_per_tick=budget
+        ),
+    )
+    rt = FleetRuntime(fleet, cfg)
+    rt.run(TickFeed(fs, BATCH))
+    gov = rt.governor.state
+    return {
+        "n_devices": n_devices,
+        "ticks": ticks,
+        "budget_bytes_per_tick": budget,
+        "bytes_per_tick": gov.bytes_per_tick,
+        "merges": gov.merges,
+        "deferred_budget": gov.deferred_budget,
+        "candidate_rounds": ticks // MERGE_EVERY,
+    }
+
+
+def run_bench(ticks: int, *, seed: int = 0) -> dict:
+    ds, fs, x_eval, y_eval = build_scenario(N_DEVICES, ticks, seed=seed)
+    gated = run_soak(fs, x_eval, y_eval, ds.n_features, gate=True, seed=seed)
+    ungated = run_soak(fs, x_eval, y_eval, ds.n_features, gate=False, seed=seed)
+    slo = run_slo_probe(seed=seed)
+    return {
+        "backend": jax.default_backend(),
+        "n_devices": N_DEVICES,
+        "n_hidden": N_HIDDEN,
+        "batch_per_tick": BATCH,
+        "merge_every": MERGE_EVERY,
+        "drift_frac": DRIFT_FRAC,
+        "gated": gated,
+        "ungated": ungated,
+        "slo_probe": slo,
+    }
+
+
+def main(
+    ticks: int = TICKS_SMOKE, out_path: str = "BENCH_serve_runtime.json"
+) -> list[str]:
+    report = run_bench(ticks)
+    # persist BEFORE asserting — a failed claim still leaves the artifact
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+
+    lines = []
+    for key in ("gated", "ungated"):
+        r = report[key]
+        tick_us = 1e6 / r["ticks_per_sec"]
+        merge_us = (
+            f"{r['merge_latency_us_mean']:.0f}"
+            if r["merge_latency_us_mean"] is not None else "n/a"
+        )
+        lines.append(
+            f"serve_runtime/{key}/d{r['n_devices']},"
+            f"{tick_us:.1f},"
+            f"ticks={r['ticks']};ticks_per_sec={r['ticks_per_sec']:.1f};"
+            f"merges={r['merges']};merge_us={merge_us};"
+            f"delay_mean={r['detection_delay_ticks_mean']};"
+            f"missed={len(r['missed_detections'])};fp={len(r['false_positives'])};"
+            f"clean_auc={r['clean_auc_mean']:.4f}"
+        )
+    s = report["slo_probe"]
+    lines.append(
+        f"serve_runtime/slo/d{s['n_devices']},0.0,"
+        f"budget={s['budget_bytes_per_tick']:.0f};actual={s['bytes_per_tick']:.0f};"
+        f"merges={s['merges']};deferred={s['deferred_budget']}"
+    )
+
+    g, u = report["gated"], report["ungated"]
+    # the acceptance's soak shape: a D=256 fleet through >= 200 ticks
+    assert g["n_devices"] == N_DEVICES and g["ticks"] >= 200, g
+    assert g["n_drift_events"] > 0, g
+    # compile-once tick loop (already raised inside run_soak if violated)
+    assert all(v == 1 for v in g["jit_cache_sizes"].values()), g
+    # gated: every injected drift detected, no stationary device flagged
+    assert not g["missed_detections"], g
+    assert not g["false_positives"], g
+    # quarantine recovers post-merge AUC above the no-gating baseline
+    assert g["clean_auc_mean"] > u["clean_auc_mean"], (g, u)
+    assert g["clean_auc_mean"] > 0.9, g
+    # quarantined rounds ship fewer payloads than merge-everyone rounds
+    assert g["bytes_spent"] < u["bytes_spent"], (g, u)
+    # the comm-budget SLO actually defers merges and holds the budget
+    assert s["deferred_budget"] > 0, s
+    assert s["merges"] < s["candidate_rounds"], s
+    assert s["bytes_per_tick"] <= s["budget_bytes_per_tick"], s
+    lines.append(f"# serve-runtime artifact → {out_path}")
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI soak — this IS the acceptance configuration "
+             f"(D={N_DEVICES}, {TICKS_SMOKE} ticks, injected drift)",
+    )
+    ap.add_argument("--out", default="BENCH_serve_runtime.json")
+    args = ap.parse_args()
+    ticks = TICKS_SMOKE if args.smoke else TICKS_FULL
+    for line in main(ticks, args.out):
+        print(line)
+    print(f"# serve_runtime ok — D={N_DEVICES}, {ticks} ticks")

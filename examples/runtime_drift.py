@@ -1,0 +1,111 @@
+"""Resident runtime demo: online drift detection + drift-adaptive merges.
+
+A 16-device fleet serves non-IID HAR streams tick by tick. Mid-stream,
+a quarter of the devices drift to a held-out activity pattern. The
+resident runtime detects each drift from the device's own ae_score
+trajectory within a couple of ticks, quarantines the drifted devices
+out of the cooperative updates, keeps merging the healthy ones under a
+communication budget, and snapshots the whole fleet so a restart
+resumes mid-stream.
+
+    PYTHONPATH=src python examples/runtime_drift.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import AnomalyDataset, make_har_dataset
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays, train_test_split
+from repro.fleet import init_fleet, make_fleet_streams, random_drift_schedule, ring
+from repro.runtime import (
+    FleetRuntime,
+    GovernorConfig,
+    RuntimeConfig,
+    TickFeed,
+)
+
+D, HIDDEN, BATCH, TICKS, KEEP = 16, 16, 2, 160, 2
+
+
+def main() -> None:
+    ds = make_har_dataset(seed=0, samples_per_class=150)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    ds = ds._replace(x=((ds.x - lo) / (hi - lo + 1e-6)).astype(np.float32))
+    train, test = train_test_split(ds, 0.8, seed=0)
+    sub = train.y < KEEP + 1
+    train3 = AnomalyDataset(train.name, train.x[sub], train.y[sub],
+                            train.class_names[: KEEP + 1])
+
+    steps = TICKS * BATCH
+    drift = random_drift_schedule(
+        D, steps, KEEP + 1, frac=0.25, seed=2, home_classes=KEEP, targets=(KEEP,),
+    )
+    fs = make_fleet_streams(
+        train3, D, steps, n_init=2 * HIDDEN, drift=drift, seed=0, n_assign=KEEP
+    )
+    feed = TickFeed(fs, BATCH)
+    print(f"{D} devices × {feed.n_ticks} ticks; scheduled drift (device→tick): "
+          f"{feed.drift_ticks()}")
+
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), D, ds.n_features, HIDDEN, fs.x_init,
+        activation="identity", ridge=1e-3,
+    )
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        cfg = RuntimeConfig(
+            topology=ring(D, hops=2),
+            ridge=1e-3,
+            governor=GovernorConfig(merge_every=20),
+            snapshot_every=50,
+            snapshot_dir=ckpt_dir,
+        )
+        rt = FleetRuntime(fleet, cfg)
+        for t in range(feed.n_ticks):
+            rep = rt.tick(feed.tick_batch(t))
+            for dev in np.flatnonzero(rep.fresh_detections):
+                print(f"tick {t:3d}: DRIFT DETECTED on device {dev} "
+                      f"(loss {rep.losses[dev]:.4f})")
+            if rep.decision.merge:
+                q = D - rep.decision.participants
+                print(f"tick {t:3d}: merge #{rt.merge_round} — "
+                      f"{rep.decision.participants}/{D} participate "
+                      f"({q} quarantined), {rep.decision.round_bytes/1e3:.0f} kB, "
+                      f"{rep.merge_seconds*1e3:.0f} ms")
+
+        rt.assert_compile_once()
+        print(f"compile-once tick loop verified: {rt.jit_cache_sizes()}")
+
+        # the drifted concept (pattern KEEP) is exactly what the eval
+        # protocol labels anomalous — quarantine kept it out of the merges
+        sub_t = test.y < KEEP + 1
+        test3 = AnomalyDataset(test.name, test.x[sub_t], test.y[sub_t],
+                               test.class_names[: KEEP + 1])
+        x_eval, y_eval = anomaly_eval_arrays(
+            test3, list(range(KEEP)), anomaly_ratio=0.3, seed=0
+        )
+        from repro.fleet import fleet_score
+
+        clean = [d for d in range(D) if d not in feed.drift_ticks()]
+        scores = np.asarray(fleet_score(rt.states, jnp.asarray(x_eval)))
+        aucs = [roc_auc(scores[d], y_eval) for d in clean]
+        print(f"clean-device anomaly AUC vs the drifted concept: "
+              f"mean {np.mean(aucs):.4f}, min {np.min(aucs):.4f}")
+
+        # restart durability: snapshot the final state, then a fresh
+        # runtime resumes from it with the fleet bit-identical
+        rt.snapshot()
+        rt2 = FleetRuntime(
+            init_fleet(jax.random.PRNGKey(0), D, ds.n_features, HIDDEN,
+                       fs.x_init, activation="identity", ridge=1e-3),
+            cfg,
+        )
+        resumed = rt2.restore()
+        same = np.allclose(np.asarray(rt2.states.beta), np.asarray(rt.states.beta))
+        print(f"restored snapshot at tick {resumed}; fleet state intact: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -76,10 +76,16 @@ def load_pytree(template: PyTree, path: str | os.PathLike) -> PyTree:
         )
     import jax.numpy as jnp
 
-    restored = [
-        jnp.asarray(l).astype(t.dtype) if hasattr(t, "dtype") else l
-        for l, t in zip(leaves, flat)
-    ]
+    restored = []
+    for l, t in zip(leaves, flat):
+        if isinstance(t, np.ndarray):
+            # host-side leaves (counters, ledgers) stay numpy — int64
+            # survives exactly instead of being truncated by jnp
+            restored.append(np.asarray(l, dtype=t.dtype))
+        elif hasattr(t, "dtype"):
+            restored.append(jnp.asarray(l).astype(t.dtype))
+        else:
+            restored.append(l)
     return jax.tree_util.tree_unflatten(treedef, restored)
 
 

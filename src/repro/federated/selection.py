@@ -5,12 +5,29 @@ of work: resource-constrained selection (Nishio & Yonetani, ref [19])
 and accuracy-driven selection excluding unsatisfying local models
 (Qin et al., ref [20]). We provide both as pluggable strategies for
 ``cooperative_round(select=...)``.
+
+Two API levels:
+
+- **id-level** (``SelectFn``) — callables over client-id sequences, the
+  original per-round hooks used by ``federated.protocol``.
+- **fleet-level** (``FleetMaskFn``) — vectorized policies over the
+  stacked device axis: a (D,) per-device loss/score array in, a (D,)
+  0/1 participation mask out. These are the stateful building blocks
+  the resident runtime's merge governor composes every round
+  (``repro.runtime.governor``): the mask is a *traced* operand of the
+  masked topology merge, so selection decisions never retrace the
+  compiled merge.
 """
 from __future__ import annotations
 
 from typing import Callable, Mapping, Sequence
 
+import numpy as np
+
 SelectFn = Callable[[Sequence[str]], Sequence[str]]
+
+# (D,) per-device losses -> (D,) bool participation mask
+FleetMaskFn = Callable[[np.ndarray], np.ndarray]
 
 
 def all_clients(ids: Sequence[str]) -> Sequence[str]:
@@ -38,5 +55,32 @@ def loss_threshold_selection(
 
     def select(ids: Sequence[str]) -> Sequence[str]:
         return [i for i in ids if local_losses.get(i, float("inf")) <= max_loss]
+
+    return select
+
+
+# --------------------------------------------------- fleet-level (array) hooks
+
+
+def fleet_loss_threshold(max_loss: float) -> FleetMaskFn:
+    """Ref [20] at fleet scale: devices whose current per-tick loss
+    exceeds ``max_loss`` sit the round out. Non-finite losses are always
+    excluded."""
+
+    def select(losses: np.ndarray) -> np.ndarray:
+        losses = np.asarray(losses)
+        return np.isfinite(losses) & (losses <= max_loss)
+
+    return select
+
+
+def fleet_resource_budget(round_cost: np.ndarray, deadline: float) -> FleetMaskFn:
+    """Ref [19] at fleet scale: a fixed (D,) per-device round-time
+    estimate; devices that cannot meet the deadline are excluded
+    regardless of their loss."""
+    fits = np.asarray(round_cost) <= deadline
+
+    def select(losses: np.ndarray) -> np.ndarray:
+        return fits
 
     return select

@@ -28,6 +28,8 @@ from repro.fleet.fleet import (
     fleet_from_uv,
     fleet_merge,
     fleet_merge_kernel,
+    fleet_merge_masked,
+    fleet_merge_masked_kernel,
     fleet_score,
     fleet_to_uv,
     fleet_train,
@@ -56,7 +58,7 @@ __all__ = [
     "RoundCost", "fedavg_total_cost", "model_nbytes", "payload_nbytes",
     "topology_round_cost",
     "device_state", "fleet_from_uv", "fleet_merge", "fleet_merge_kernel",
-    "fleet_merge_sharded",
+    "fleet_merge_masked", "fleet_merge_masked_kernel", "fleet_merge_sharded",
     "fleet_to_uv", "fleet_score", "fleet_train", "fleet_train_rounds",
     "init_fleet",
     "DriftEvent", "FleetStreams", "make_fleet_streams", "random_drift_schedule",

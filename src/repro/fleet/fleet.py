@@ -225,6 +225,130 @@ def fleet_merge_kernel(
     return states.replace(beta=beta, p=p)
 
 
+def _masked_merge_body(
+    states: OSELMState, topology: Topology, mask: jnp.ndarray, ridge: float
+) -> OSELMState:
+    """Participation-masked Eq. 8 merge. ``mask`` is a traced (D,) 0/1
+    vector: devices with mask 0 neither contribute their (U, V) to any
+    neighbor's sum nor receive the merged model (they keep their own
+    (P, β) untouched). Because the mask is a runtime operand, gating a
+    device in or out between rounds never retraces the merge."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    mf = mask.astype(uv.u.dtype)
+    wu = uv.u * mf[:, None, None]
+    wv = uv.v * mf[:, None, None]
+    n_dev = topology.n_devices
+
+    if topology.kind == "segment":
+        cids = jnp.asarray(topology.cluster_ids)
+        su = jax.ops.segment_sum(wu, cids, num_segments=topology.n_clusters)
+        sv = jax.ops.segment_sum(wv, cids, num_segments=topology.n_clusters)
+        if topology.head_exchange:
+            p, beta = _solve_uv(su.sum(0), sv.sum(0), ridge)
+            merged = states.replace(beta=_bcast(beta, n_dev), p=_bcast(p, n_dev))
+        else:
+            pc, betac = jax.vmap(partial(_solve_uv, ridge=ridge))(su, sv)
+            merged = states.replace(beta=betac[cids], p=pc[cids])
+    elif topology.is_fully_connected:
+        p, beta = _solve_uv(wu.sum(0), wv.sum(0), ridge)
+        merged = states.replace(beta=_bcast(beta, n_dev), p=_bcast(p, n_dev))
+    else:
+        mixed = UV(u=topology.mix(wu), v=topology.mix(wv))
+        merged = fleet_from_uv(states, mixed, ridge=ridge)
+
+    keep = (mf > 0)[:, None, None]
+    return states.replace(
+        beta=jnp.where(keep, merged.beta, states.beta),
+        p=jnp.where(keep, merged.p, states.p),
+    )
+
+
+@partial(jax.jit, static_argnames=("topology", "ridge"))
+def fleet_merge_masked(
+    states: OSELMState, topology: Topology, mask: jnp.ndarray, *, ridge: float = 0.0
+) -> OSELMState:
+    """``fleet_merge`` with a runtime participation mask — the merge
+    governor's quarantine primitive (drifted devices are masked out of
+    the topology without recompiling). An all-ones mask reproduces
+    ``fleet_merge`` exactly. Use ``ridge > 0`` so a cluster whose
+    members are all quarantined still solves a well-posed (discarded)
+    system."""
+    return _masked_merge_body(states, topology, jnp.asarray(mask), ridge)
+
+
+@partial(jax.jit, static_argnames=("topology", "ridge", "interpret"))
+def fleet_merge_masked_kernel(
+    states: OSELMState,
+    topology: Topology,
+    mask: jnp.ndarray,
+    *,
+    ridge: float = 0.0,
+    interpret: bool = True,
+) -> OSELMState:
+    """``fleet_merge_masked`` through the Pallas merge-kernel family:
+    segment topologies gate participation *inside* the segment-sum
+    kernel (``masked_segment_sum_mix``, scalar-prefetched mask — the
+    masked payload stack never exists in HBM); banded/dense paths fold
+    the mask into the payload before the existing kernels."""
+    from repro.kernels.topology_merge import (
+        banded_merge_solve,
+        dense_mix,
+        from_uv_solve,
+        masked_segment_sum_mix,
+    )
+
+    uv = fleet_to_uv(states, ridge=ridge)
+    n = uv.u.shape[1]
+    n_dev = topology.n_devices
+    mask = jnp.asarray(mask)
+    mf = mask.astype(uv.u.dtype)
+    w = jnp.concatenate([uv.u, uv.v], axis=2)  # stacked [U | V] payloads
+
+    if topology.kind == "segment":
+        sums = masked_segment_sum_mix(
+            w, topology.cluster_ids, mf, topology.n_clusters, interpret=interpret
+        )
+        if topology.head_exchange:
+            total = sums.sum(0, keepdims=True)
+            p, beta = from_uv_solve(
+                total[:, :, :n], total[:, :, n:], ridge=ridge, interpret=interpret
+            )
+            merged = states.replace(
+                beta=_bcast(beta[0], n_dev), p=_bcast(p[0], n_dev)
+            )
+        else:
+            cids = jnp.asarray(topology.cluster_ids)
+            pc, betac = from_uv_solve(
+                sums[:, :, :n], sums[:, :, n:], ridge=ridge, interpret=interpret
+            )
+            merged = states.replace(beta=betac[cids], p=pc[cids])
+    else:
+        wm = w * mf[:, None, None]
+        if topology.kind == "banded" and not topology.band_closed:
+            p, beta = banded_merge_solve(
+                wm, topology.hops, ridge=ridge, interpret=interpret
+            )
+            merged = states.replace(beta=beta, p=p)
+        elif topology.is_fully_connected:
+            total = wm.sum(0, keepdims=True)
+            p, beta = from_uv_solve(
+                total[:, :, :n], total[:, :, n:], ridge=ridge, interpret=interpret
+            )
+            merged = states.replace(beta=_bcast(beta[0], n_dev), p=_bcast(p[0], n_dev))
+        else:
+            mixed = dense_mix(wm, topology.dense_matrix(), interpret=interpret)
+            p, beta = from_uv_solve(
+                mixed[:, :, :n], mixed[:, :, n:], ridge=ridge, interpret=interpret
+            )
+            merged = states.replace(beta=beta, p=p)
+
+    keep = (mf > 0)[:, None, None]
+    return states.replace(
+        beta=jnp.where(keep, merged.beta, states.beta),
+        p=jnp.where(keep, merged.p, states.p),
+    )
+
+
 @jax.jit
 def fleet_score(states: OSELMState, x: jnp.ndarray) -> jnp.ndarray:
     """Per-device anomaly scores on shared eval data: (D, k)."""

@@ -58,24 +58,42 @@ def random_drift_schedule(
     *,
     frac: float = 0.25,
     seed: int = 0,
+    home_classes: int | None = None,
+    targets: Sequence[int] | None = None,
 ) -> tuple[DriftEvent, ...]:
     """A ``frac`` fraction of devices drifts once, at a random step in
     the middle half of its stream, to a uniformly-random *other*
     pattern — "other" relative to the round-robin assignment
     (device i starts on pattern i mod C), so no event is a no-op.
-    With a single class there is no other pattern to drift to."""
+    With a single class there is no other pattern to drift to.
+
+    ``home_classes`` restricts the round-robin home assignment to the
+    first H classes (matching ``make_fleet_streams(n_assign=H)``), and
+    ``targets`` restricts drift destinations — e.g. drift every device
+    into a *held-out* pattern so the drifted concept is exactly what
+    the fleet's eval protocol labels anomalous."""
     if n_classes < 2:
         raise ValueError("drift needs n_classes >= 2")
+    homes = n_classes if home_classes is None else home_classes
+    if not 1 <= homes <= n_classes:
+        raise ValueError(f"need 1 <= home_classes={homes} <= n_classes={n_classes}")
     rng = np.random.default_rng(seed)
     n_drift = int(round(frac * n_devices))
     devices = rng.choice(n_devices, size=n_drift, replace=False)
     events = []
     for d in devices:
         step = int(rng.integers(steps // 4, max(3 * steps // 4, steps // 4 + 1)))
-        current = int(d) % n_classes
-        new_pat = int(rng.integers(0, n_classes - 1))
-        if new_pat >= current:
-            new_pat += 1
+        current = int(d) % homes
+        if targets is None:
+            pool = [c for c in range(n_classes) if c != current]
+        else:
+            pool = [c for c in targets if c != current]
+            if not pool:
+                raise ValueError(
+                    f"no valid drift target for device {d}: targets={targets!r} "
+                    f"collapse onto its home pattern {current}"
+                )
+        new_pat = int(pool[rng.integers(0, len(pool))])
         events.append(DriftEvent(device=int(d), step=step, new_pattern=new_pat))
     return tuple(sorted(events, key=lambda e: (e.device, e.step)))
 
@@ -108,20 +126,31 @@ def make_fleet_streams(
     alpha: float = 0.3,
     drift: Sequence[DriftEvent] = (),
     seed: int = 0,
+    n_assign: int | None = None,
 ) -> FleetStreams:
     """Deal non-IID streams (plus Eq. 13 init chunks) to ``n_devices``
     virtual devices. Init chunks always come from the device's initial
-    dominant pattern (a device boots on its own environment)."""
+    dominant pattern (a device boots on its own environment).
+
+    ``n_assign`` limits the round-robin home assignment to the first
+    ``n_assign`` patterns while drift events may still target ANY
+    pattern of ``ds`` — the drift-to-held-out-concept scenario the
+    runtime's quarantine benchmark quantifies (trained patterns stay
+    {0..n_assign−1}; a drifted device starts serving a pattern the
+    eval protocol labels anomalous)."""
     rng = np.random.default_rng(seed)
     n_classes = ds.n_classes
     pools = [ds.pattern(c) for c in range(n_classes)]
+    homes = n_classes if n_assign is None else n_assign
+    if not 1 <= homes <= n_classes:
+        raise ValueError(f"need 1 <= n_assign={homes} <= n_classes={n_classes}")
 
     if assignment == "round_robin":
-        probs = np.eye(n_classes, dtype=np.float64)[
-            np.arange(n_devices) % n_classes
-        ]
+        probs = np.zeros((n_devices, n_classes), dtype=np.float64)
+        probs[np.arange(n_devices), np.arange(n_devices) % homes] = 1.0
     elif assignment == "dirichlet":
-        probs = rng.dirichlet(np.full(n_classes, alpha), size=n_devices)
+        probs = np.zeros((n_devices, n_classes), dtype=np.float64)
+        probs[:, :homes] = rng.dirichlet(np.full(homes, alpha), size=n_devices)
     else:
         raise ValueError(f"unknown assignment {assignment!r}")
 

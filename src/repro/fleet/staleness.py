@@ -37,6 +37,13 @@ class StalenessSchedule:
 
     lags: np.ndarray  # (D,) int, >= 0
 
+    def __post_init__(self) -> None:
+        lags = np.asarray(self.lags)
+        if lags.ndim != 1:
+            raise ValueError(f"lags must be a (D,) vector, got shape {lags.shape}")
+        if lags.size and lags.min() < 0:
+            raise ValueError(f"lags must be >= 0, got min {lags.min()}")
+
     @property
     def max_lag(self) -> int:
         return int(self.lags.max())
@@ -63,8 +70,22 @@ class StalenessSchedule:
 def _lagged_gather(hist: jnp.ndarray, lags: jnp.ndarray, r: int) -> jnp.ndarray:
     """hist: (L, D, ...) ring of published versions, slot r%L holding the
     freshest. Returns each source device's payload at version r−lag[j],
-    clamped to version 0."""
+    clamped to version 0.
+
+    The ring must hold at least ``max(lags) + 1`` versions; a shorter
+    ring would alias version r−lag onto a *newer* slot and silently
+    serve fresher payloads than the schedule claims. Validated whenever
+    ``lags`` is a concrete array (it is a trace-time constant in every
+    in-repo caller)."""
     n_hist = hist.shape[0]
+    if not isinstance(lags, jax.core.Tracer):
+        max_lag = int(np.max(np.asarray(lags))) if np.asarray(lags).size else 0
+        if max_lag >= n_hist:
+            raise ValueError(
+                f"staleness history holds {n_hist} published versions but the "
+                f"schedule lags up to {max_lag} rounds; need history >= "
+                f"{max_lag + 1} or the ring aliases fresh payloads"
+            )
     versions = jnp.maximum(r - lags, 0)
     slots = versions % n_hist
     return hist[slots, jnp.arange(hist.shape[1])]
@@ -78,10 +99,15 @@ def fleet_train_async(
     *,
     rounds: int,
     ridge: float = 0.0,
+    history: int | None = None,
 ) -> OSELMState:
     """Round-based fleet training where merges see stale neighbor
     payloads according to ``schedule``. With all-zero lags this equals
-    ``fleet_train_rounds`` on the same topology."""
+    ``fleet_train_rounds`` on the same topology.
+
+    ``history`` sizes the published-version ring (default: exactly
+    ``max_lag + 1``, the minimum). A ring shorter than the schedule's
+    lags is a hard error, not a silent clip."""
     streams = jnp.asarray(streams)
     n_dev, steps, feat = streams.shape
     if n_dev != topology.n_devices or n_dev != len(schedule.lags):
@@ -92,7 +118,12 @@ def fleet_train_async(
     chunks = streams[:, : rounds * per].reshape(n_dev, rounds, per, feat)
 
     lags = jnp.asarray(schedule.lags)
-    n_hist = schedule.max_lag + 1
+    n_hist = schedule.max_lag + 1 if history is None else history
+    if n_hist <= schedule.max_lag:
+        raise ValueError(
+            f"history={n_hist} cannot represent lags up to {schedule.max_lag}; "
+            f"need history >= {schedule.max_lag + 1}"
+        )
     # dense mask works for every topology kind; the diagonal is handled
     # separately so a device always merges its own FRESH statistics
     m = jnp.asarray(topology.dense_matrix())

@@ -54,6 +54,7 @@ from repro.fleet.topology import Topology
 __all__ = [
     "banded_mix",
     "segment_sum_mix",
+    "masked_segment_sum_mix",
     "segment_broadcast",
     "dense_mix",
     "topology_mix",
@@ -174,6 +175,76 @@ def _segment_sum_mix_call(
         out_shape=jax.ShapeDtypeStruct((n_clusters, rp, cp), jnp.float32),
         interpret=interpret,
     )(jnp.asarray(cluster_ids, jnp.int32), xp)
+    return out[:, :r, :c]
+
+
+def _masked_segsum_kernel(cids_ref, mask_ref, x_ref, o_ref, acc_ref):
+    d = pl.program_id(1)
+    first = jnp.logical_or(
+        d == 0, cids_ref[d] != cids_ref[jnp.maximum(d - 1, 0)]
+    )
+
+    @pl.when(first)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # the participation gate is applied in VMEM as the block streams in:
+    # a quarantined device's payload is read but contributes 0, so the
+    # masked stack is never materialized in HBM and the mask can change
+    # every merge round without retracing (it is a traced operand)
+    acc_ref[...] += x_ref[...].astype(jnp.float32) * mask_ref[d].astype(jnp.float32)
+    o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def masked_segment_sum_mix(
+    x: jnp.ndarray,
+    cluster_ids,
+    mask: jnp.ndarray,
+    n_clusters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Participation-masked cluster aggregates: out[c] = Σ_{d: cid[d]=c}
+    mask[d]·x[d]. Same contiguous-cluster requirement as
+    ``segment_sum_mix``; ``mask`` is a traced (D,) 0/1 vector prefetched
+    next to the cluster ids, so gating devices in and out of a merge
+    round never recompiles the kernel."""
+    cids = np.asarray(cluster_ids)
+    if not np.all(np.diff(cids) >= 0):
+        raise ValueError(
+            "masked_segment_sum_mix needs sorted (contiguous-cluster) cluster_ids; "
+            "sort the device axis by cluster first"
+        )
+    return _masked_segment_sum_mix_call(
+        x, jnp.asarray(cids, jnp.int32), jnp.asarray(mask, jnp.float32),
+        n_clusters, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "interpret"))
+def _masked_segment_sum_mix_call(
+    x: jnp.ndarray,
+    cluster_ids: jnp.ndarray,
+    mask: jnp.ndarray,
+    n_clusters: int,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    d, r, c = x.shape
+    xp, rp, cp = _pad_stacked(x)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(cp // _LANE, d),
+        in_specs=[pl.BlockSpec((1, rp, _LANE), lambda j, i, cids, mask: (i, 0, j))],
+        out_specs=pl.BlockSpec((1, rp, _LANE), lambda j, i, cids, mask: (cids[i], 0, j)),
+        scratch_shapes=[pltpu.VMEM((1, rp, _LANE), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _masked_segsum_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_clusters, rp, cp), jnp.float32),
+        interpret=interpret,
+    )(cluster_ids, mask, xp)
     return out[:, :r, :c]
 
 

@@ -1,6 +1,14 @@
 """Batched serving driver: continuous request loop with KV caches and
 the paper's OS-ELM drift monitor scoring every batch.
 
+The monitor is the resident runtime's sequential detector
+(``repro.runtime.detector``) run at n_devices=1: the OS-ELM
+autoencoder is warmed up on the first batch's features BEFORE any
+score is taken (an untrained detector's round-0 score is
+meaningless), every round's features are scored exactly once against
+the current detector, and the EWMA/threshold detector turns the raw
+score trajectory into an explicit DETECTED flag.
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --rounds 4 --batch 4 --prompt-len 64 --new-tokens 16
 """
@@ -13,8 +21,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import ae_score, init_autoencoder, oselm_step
+from repro.core import ae_score, ae_train_stream, init_autoencoder, oselm_step
 from repro.models import decode_step, encoder_forward, init_params, prefill
+from repro.runtime import DetectorConfig, detector_update, init_detector
 
 
 def main() -> None:
@@ -50,7 +59,29 @@ def main() -> None:
         lambda p, t, c, pos, e: decode_step(p, cfg, t, c, pos, enc_out=e, max_seq=max_seq)
     )
 
-    detector = None
+    # Warm up the monitor BEFORE the serving loop: prefill a couple of
+    # in-distribution batches the loop will never serve, and train the
+    # detector on their features. Round 0 is then scored OUT-of-sample
+    # against a calibrated detector — previously the first round scored
+    # the very features the detector had just been initialized on, so
+    # the round-0 "drift score" was trivially ~0 and poisoned the
+    # monitor's baseline.
+    warm_feats = []
+    for w in range(2):
+        kw = jax.random.fold_in(key, 10_000 + w)  # disjoint from round keys
+        wp = jax.random.randint(kw, (B, S), 0, cfg.vocab)
+        _, _, f = prefill_fn(params, wp, fe)
+        warm_feats.append(f)
+    warm = jnp.concatenate(warm_feats)
+    detector = init_autoencoder(
+        jax.random.PRNGKey(7), cfg.d_model, cfg.detector_hidden,
+        jnp.tile(warm, (2 * cfg.detector_hidden // warm.shape[0] + 1, 1)),
+        activation="identity", ridge=1e-2,
+    )
+    detector = ae_train_stream(detector, warm)
+
+    monitor = init_detector(1)
+    mon_cfg = DetectorConfig(alpha=0.7, k_sigma=4.0, warmup=2, patience=1)
     for rnd in range(args.rounds):
         k = jax.random.fold_in(key, rnd)
         prompts = jax.random.randint(k, (B, S), 0, cfg.vocab)
@@ -66,17 +97,16 @@ def main() -> None:
         jax.block_until_ready(tok)
         dt = time.time() - t0
 
-        if detector is None:  # warm up the monitor on the first batch
-            detector = init_autoencoder(
-                jax.random.PRNGKey(7), cfg.d_model, cfg.detector_hidden,
-                jnp.tile(features, (2 * cfg.detector_hidden // B + 1, 1)),
-                activation="identity", ridge=1e-2,
-            )
-            score = float(ae_score(detector, features).mean())
-        else:
-            score = float(ae_score(detector, features).mean())
-            detector = oselm_step(detector, features, features)
+        # single scoring site: every round (incl. round 0) is scored
+        # against the current detector, THEN the detector trains on it
+        score = float(ae_score(detector, features).mean())
+        monitor, flagged, _ = detector_update(
+            monitor, jnp.asarray([score]), mon_cfg
+        )
+        detector = oselm_step(detector, features, features)
         flag = "  << DRIFT" if rnd == drift_round else ""
+        if bool(flagged[0]):
+            flag += "  [DETECTED]"
         print(
             f"round {rnd}: {B} reqs × {args.new_tokens} tok in {dt:.2f}s "
             f"({B*args.new_tokens/dt:.1f} tok/s) drift_score={score:.5f}{flag}"

@@ -1,0 +1,33 @@
+"""repro.runtime — resident streaming fleet runtime.
+
+The serving layer on top of the fleet simulator: a live ``FleetRuntime``
+owns the stacked OS-ELM fleet and processes a stream of ticks — jitted
+ingest (score + k=1 sequential training), a vectorized sequential
+concept-drift detector over the ae_score trajectories, a stateful merge
+governor that quarantines drifted devices out of the topology merge
+(re-admitting them after re-convergence) under a per-topology
+comm-budget SLO, optional stale-payload merging, and checkpointed
+snapshots so the fleet survives restarts. The whole tick loop is a
+compile-once path (``FleetRuntime.assert_compile_once``).
+"""
+from repro.runtime.detector import (
+    DetectorConfig,
+    DetectorState,
+    detector_update,
+    init_detector,
+)
+from repro.runtime.feed import TickFeed
+from repro.runtime.governor import (
+    GovernorConfig,
+    GovernorState,
+    MergeDecision,
+    MergeGovernor,
+)
+from repro.runtime.runtime import FleetRuntime, RuntimeConfig, TickReport
+
+__all__ = [
+    "DetectorConfig", "DetectorState", "detector_update", "init_detector",
+    "TickFeed",
+    "GovernorConfig", "GovernorState", "MergeDecision", "MergeGovernor",
+    "FleetRuntime", "RuntimeConfig", "TickReport",
+]

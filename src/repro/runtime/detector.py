@@ -1,0 +1,207 @@
+"""Online sequential concept-drift detection over ae_score trajectories.
+
+Implements the loss-based sequential detector the follow-up papers run
+on-device next to the OS-ELM model: an EWMA of the per-tick
+reconstruction loss is compared against a calibrated baseline band
+(Yamada & Matsutani, arXiv:2212.09637, sequential detection on OS-ELM
+anomaly scores; Sunaga et al., arXiv:2203.01077, loss-threshold retrain
+trigger). Per device:
+
+    ewma_t = (1 − α)·ewma_{t−1} + α·loss_t
+    drift  ⇔ ewma_t > μ_base + k·σ_base          (one-sided: loss UP)
+
+- **calibration** — the first ``warmup`` ticks only feed the running
+  baseline (Welford mean/variance of the tick losses); no flags fire.
+- **slow baseline tracking** — while in-band, the baseline keeps
+  adapting with rate ``baseline_alpha`` ≪ ``alpha`` so gradual
+  nonstationarity (and post-merge loss drops) re-anchor the band
+  without chasing abrupt drift.
+- **hysteresis re-admission** — a drifted device stays flagged until
+  its EWMA returns below the re-entry band μ + k_re·σ (k_re < k) for
+  ``patience`` consecutive ticks; on re-admission the baseline mean is
+  re-anchored to the current EWMA (the device has re-converged on its
+  stream, possibly a new concept).
+- **post-merge rebase** — a cooperative merge changes every
+  participant's model discontinuously, stepping the fleet's in-band
+  loss level; the runtime marks the first post-merge tick and the
+  detector rescales participants' bands by the fleet-median loss ratio
+  (common-mode correction), so merge shocks do not flag while
+  idiosyncratic drift still does.
+
+The whole detector bank is ONE pytree with (D,)-leading leaves updated
+by a single vmap-free vectorized ``detector_update`` — it is called
+inside the runtime's jitted tick, so detection is part of the
+compile-once path. ``n_devices=1`` gives the single-detector monitor
+``launch/serve.py`` uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    """Static detector hyper-parameters (shared by every device)."""
+
+    alpha: float = 0.3           # EWMA rate of the tick-loss trajectory
+    k_sigma: float = 4.5         # detection threshold, in baseline sigmas
+    k_readmit: float = 2.0       # re-entry band, in baseline sigmas
+    k_track: float = 2.0         # tracking gate: the baseline follows only
+                                 # losses within this many sigmas of the
+                                 # mean, so a ramp toward the detection
+                                 # threshold is not absorbed into the band
+    warmup: int = 16             # calibration-only ticks (no flags)
+    patience: int = 8            # consecutive in-band ticks to re-admit
+    baseline_alpha: float = 0.02  # slow in-band baseline tracking rate
+    min_sigma: float = 1e-6      # sigma floor (constant calibration streams)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DetectorState:
+    """Per-device sequential-detector state; every leaf is (D,)."""
+
+    ewma: jnp.ndarray       # smoothed tick loss
+    mean: jnp.ndarray       # baseline mean (calibration + slow tracking)
+    var: jnp.ndarray        # baseline variance
+    count: jnp.ndarray      # int32 ticks observed (drives warmup)
+    drifted: jnp.ndarray    # bool — currently quarantined
+    recovery: jnp.ndarray   # int32 consecutive in-band ticks while drifted
+
+    @property
+    def n_devices(self) -> int:
+        return self.ewma.shape[0]
+
+    def replace(self, **kw) -> "DetectorState":
+        return dataclasses.replace(self, **kw)
+
+    def threshold(self, cfg: DetectorConfig) -> jnp.ndarray:
+        """Current per-device detection threshold μ + k·σ."""
+        sigma = jnp.sqrt(self.var) + cfg.min_sigma
+        return self.mean + cfg.k_sigma * sigma
+
+
+def init_detector(n_devices: int) -> DetectorState:
+    z = jnp.zeros(n_devices, jnp.float32)
+    return DetectorState(
+        ewma=z,
+        mean=z,
+        var=z,
+        count=jnp.zeros(n_devices, jnp.int32),
+        drifted=jnp.zeros(n_devices, bool),
+        recovery=jnp.zeros(n_devices, jnp.int32),
+    )
+
+
+def detector_update(
+    state: DetectorState,
+    losses: jnp.ndarray,
+    cfg: DetectorConfig,
+    *,
+    rebase: jnp.ndarray | bool = False,
+    participants: jnp.ndarray | None = None,
+) -> tuple[DetectorState, jnp.ndarray, jnp.ndarray]:
+    """One sequential-detection step on this tick's per-device losses.
+
+    Returns ``(state', drifted, fresh)`` where ``drifted`` is the (D,)
+    quarantine flag after the update and ``fresh`` marks devices whose
+    flag rose THIS tick (detection events, for delay accounting).
+    Pure and vectorized — safe to call inside a jitted tick.
+
+    ``rebase`` (a traced scalar) marks the first tick after a
+    cooperative merge: the ``participants`` of that merge received a
+    discontinuously different model, so their in-band loss level shifts
+    as a COMMON-MODE step. Their baselines are rescaled by the fleet
+    median of (loss / baseline mean) over calibrated, un-drifted
+    participants — a merge shock moves every participant's band at
+    once, while a genuinely drifted device's idiosyncratic spike towers
+    over the median and still fires (one tick later). No flags rise on
+    a rebase tick itself.
+    """
+    losses = jnp.asarray(losses, jnp.float32)
+    if participants is None:
+        participants = jnp.ones(losses.shape, bool)
+    participants = jnp.asarray(participants).astype(bool)
+    rebase = jnp.asarray(rebase)
+
+    calibrated = state.count >= cfg.warmup
+    valid = participants & ~state.drifted & calibrated
+    ratio = losses / jnp.maximum(state.mean, cfg.min_sigma)
+    common = jnp.nanmedian(jnp.where(valid, ratio, jnp.nan))
+    common = jnp.where(jnp.isfinite(common) & (common > 0), common, 1.0)
+    do_rebase = rebase & valid
+    state = state.replace(
+        mean=jnp.where(do_rebase, state.mean * common, state.mean),
+        var=jnp.where(do_rebase, state.var * common**2, state.var),
+        # the EWMA must jump with the band: after a loss-DECREASING
+        # merge (common < 1) a slowly-decaying EWMA would sit above the
+        # already-shrunk band and falsely flag every participant
+        ewma=jnp.where(do_rebase, state.ewma * common, state.ewma),
+    )
+
+    count = state.count + 1
+    warm = state.count < cfg.warmup
+
+    # EWMA trajectory; seeded with the first observation instead of 0 so
+    # warmup is not spent climbing from an arbitrary origin
+    ewma = jnp.where(
+        state.count == 0, losses,
+        (1.0 - cfg.alpha) * state.ewma + cfg.alpha * losses,
+    )
+
+    # Welford running baseline during warmup
+    delta = losses - state.mean
+    mean_w = state.mean + delta / jnp.maximum(count, 1)
+    var_w = jnp.maximum(
+        (state.var * jnp.maximum(state.count, 0) + delta * (losses - mean_w))
+        / jnp.maximum(count, 1),
+        0.0,
+    )
+
+    sigma = jnp.sqrt(state.var) + cfg.min_sigma
+    upper = state.mean + cfg.k_sigma * sigma
+    readmit_band = state.mean + cfg.k_readmit * sigma
+
+    in_band = ewma <= readmit_band
+    # slow tracking once calibrated: the baseline keeps estimating the
+    # RAW tick-loss distribution (the same units Welford calibrated),
+    # but only from losses within the k_track band — an un-flagged ramp
+    # toward the detection threshold must not be absorbed, and a
+    # drifted device's band must keep describing the PRE-drift concept
+    track = (
+        (~warm)
+        & (~state.drifted)
+        & (losses <= state.mean + cfg.k_track * sigma)
+    )
+    mean_t = jnp.where(track, (1 - cfg.baseline_alpha) * state.mean
+                       + cfg.baseline_alpha * losses, state.mean)
+    var_t = jnp.where(
+        track,
+        (1 - cfg.baseline_alpha) * state.var
+        + cfg.baseline_alpha * (losses - state.mean) ** 2,
+        state.var,
+    )
+    mean = jnp.where(warm, mean_w, mean_t)
+    var = jnp.where(warm, var_w, var_t)
+
+    fresh = (~warm) & (~state.drifted) & (ewma > upper) & ~do_rebase
+    recovery = jnp.where(
+        state.drifted & in_band, state.recovery + 1,
+        jnp.zeros_like(state.recovery),
+    )
+    readmitted = state.drifted & (recovery >= cfg.patience)
+    drifted = (state.drifted | fresh) & ~readmitted
+
+    # re-anchor the baseline on re-admission: the device has
+    # re-converged (possibly on a new concept) — its band restarts there
+    mean = jnp.where(readmitted, ewma, mean)
+    recovery = jnp.where(readmitted, 0, recovery)
+
+    new = DetectorState(
+        ewma=ewma, mean=mean, var=var, count=count,
+        drifted=drifted, recovery=recovery,
+    )
+    return new, drifted, fresh

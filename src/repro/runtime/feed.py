@@ -1,0 +1,60 @@
+"""Tick-batched ingest view over ``FleetStreams``.
+
+The resident runtime consumes per-device streams in fixed-size tick
+batches: tick t serves samples [t·B, (t+1)·B) of every device's stream
+simultaneously, shaped (D, B, features). ``TickFeed`` is the cursorless
+host-side view that deals those slices (constant shape → the jitted
+ingest compiles once) and maps the partitioner's step-indexed
+``DriftEvent`` schedule onto tick indices so detection delay can be
+measured in the same clock the detector runs on.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.fleet.partition import FleetStreams
+
+
+class TickFeed:
+    """Deal (D, batch, features) tick batches from a ``FleetStreams``."""
+
+    def __init__(self, streams: FleetStreams, batch: int) -> None:
+        if batch < 1:
+            raise ValueError(f"need batch >= 1, got {batch}")
+        steps = streams.xs.shape[1]
+        if batch > steps:
+            raise ValueError(f"batch={batch} exceeds stream length {steps}")
+        self.streams = streams
+        self.batch = batch
+        self.n_ticks = steps // batch
+        tail = steps - self.n_ticks * batch
+        if tail:
+            # same contract as fleet_train_rounds: constant tick shapes
+            # beat a ragged final batch (which would retrace the ingest)
+            import logging
+
+            logging.getLogger(__name__).warning(
+                "TickFeed: %d trailing samples per stream dropped "
+                "(steps=%d not divisible by batch=%d)", tail, steps, batch,
+            )
+
+    @property
+    def n_devices(self) -> int:
+        return self.streams.n_devices
+
+    def tick_batch(self, t: int) -> np.ndarray:
+        """Samples every device serves during tick ``t``: (D, B, F)."""
+        if not 0 <= t < self.n_ticks:
+            raise IndexError(f"tick {t} outside [0, {self.n_ticks})")
+        lo = t * self.batch
+        return self.streams.xs[:, lo : lo + self.batch]
+
+    def drift_ticks(self) -> dict[int, int]:
+        """device -> tick at which its first scheduled drift event lands
+        (ground truth for detection-delay accounting)."""
+        out: dict[int, int] = {}
+        for ev in sorted(self.streams.drift, key=lambda e: e.step):
+            tick = ev.step // self.batch
+            if ev.device not in out and tick < self.n_ticks:
+                out[ev.device] = tick
+        return out

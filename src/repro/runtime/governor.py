@@ -1,0 +1,117 @@
+"""Merge governor: *when* and *with whom* the resident fleet merges.
+
+Turns the ``repro.federated.selection`` hooks into stateful fleet-level
+policy: every candidate round the governor builds a participation mask
+from the drift monitor (quarantine drifted devices out of the topology,
+re-admission is the detector's hysteresis) plus any extra fleet
+selection policies, and admits the merge only if the per-topology
+communication budget allows it.
+
+The comm-budget SLO reuses ``repro.fleet.comm``: a merge round over the
+topology costs ``topology_round_cost`` bytes, scaled by the fraction of
+participating devices (quarantined devices neither publish nor download
+payloads). The governor defers a merge whenever admitting it would push
+the *average* bytes/tick above ``budget_bytes_per_tick`` — the serving
+SLO knob the ROADMAP asked for — and records every decision so the soak
+benchmark can report merge cadence and deferrals.
+
+All decisions are host-side Python between jitted ticks; the masks they
+emit are traced operands of the compile-once masked merge
+(``fleet_merge_masked``), so governing never retraces anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.federated.selection import FleetMaskFn
+from repro.fleet.comm import topology_round_cost
+from repro.fleet.topology import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    """Merge-scheduling policy knobs."""
+
+    merge_every: int = 16                      # candidate cadence, in ticks
+    budget_bytes_per_tick: float | None = None  # comm SLO; None = unlimited
+    min_participants: int = 2                  # below this a merge is pointless
+
+
+@dataclasses.dataclass
+class GovernorState:
+    """Host-side ledger of the governor's decisions."""
+
+    ticks: int = 0
+    merges: int = 0
+    deferred_budget: int = 0
+    deferred_participants: int = 0
+    bytes_spent: int = 0
+
+    @property
+    def bytes_per_tick(self) -> float:
+        return self.bytes_spent / max(self.ticks, 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeDecision:
+    merge: bool
+    reason: str            # "merge" | "cadence" | "budget" | "participants"
+    participants: int
+    round_bytes: int
+
+
+class MergeGovernor:
+    """Stateful merge scheduler for one resident fleet."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        n_hidden: int,
+        n_out: int,
+        cfg: GovernorConfig,
+        *,
+        policies: tuple[FleetMaskFn, ...] = (),
+    ) -> None:
+        self.topology = topology
+        self.cfg = cfg
+        self.policies = policies
+        self.state = GovernorState()
+        self._full_round_bytes = topology_round_cost(
+            topology, n_hidden, n_out
+        ).bytes_total
+
+    def participation(self, drifted: np.ndarray, losses: np.ndarray) -> np.ndarray:
+        """Quarantine ∧ extra selection policies → (D,) 0/1 mask."""
+        mask = ~np.asarray(drifted, bool)
+        for policy in self.policies:
+            mask &= np.asarray(policy(losses), bool)
+        return mask
+
+    def round_bytes(self, participants: int) -> int:
+        """Round traffic with only ``participants`` of D devices live:
+        payload counts scale with the participating fraction (a
+        quarantined device neither uploads nor downloads)."""
+        frac = participants / max(self.topology.n_devices, 1)
+        return int(self._full_round_bytes * frac)
+
+    def decide(self, tick: int, mask: np.ndarray) -> MergeDecision:
+        """Admission control for one tick. Call exactly once per tick
+        (it advances the budget ledger's tick count)."""
+        self.state.ticks = tick + 1
+        participants = int(np.asarray(mask).sum())
+        rb = self.round_bytes(participants)
+        if (tick + 1) % self.cfg.merge_every != 0:
+            return MergeDecision(False, "cadence", participants, rb)
+        if participants < self.cfg.min_participants:
+            self.state.deferred_participants += 1
+            return MergeDecision(False, "participants", participants, rb)
+        if self.cfg.budget_bytes_per_tick is not None:
+            projected = (self.state.bytes_spent + rb) / (tick + 1)
+            if projected > self.cfg.budget_bytes_per_tick:
+                self.state.deferred_budget += 1
+                return MergeDecision(False, "budget", participants, rb)
+        self.state.merges += 1
+        self.state.bytes_spent += rb
+        return MergeDecision(True, "merge", participants, rb)

@@ -1,0 +1,331 @@
+"""Resident streaming fleet runtime — the paper's deployment loop.
+
+Converts the offline ``fleet_train_rounds`` batch simulator into an
+event-driven serving system that keeps the whole fleet resident and
+processes a stream of ticks:
+
+1. **ingest** — every device scores its incoming tick batch under its
+   CURRENT model (the drift signal: prediction loss on new data) and
+   then trains on it with the paper's k=1 sequential updates, as one
+   vmapped-scan jitted alongside step 2;
+2. **detect** — the vectorized sequential drift detector
+   (``repro.runtime.detector``) updates per-device EWMA/baseline state
+   in the same compiled tick function;
+3. **govern + merge** — between ticks, the merge governor
+   (``repro.runtime.governor``) builds a participation mask (quarantine
+   drifted devices, re-admit after re-convergence) and admits
+   cooperative updates under the topology's comm-budget SLO; admitted
+   merges run through the compile-once masked merge
+   (``fleet_merge_masked`` / ``fleet_merge_masked_kernel``), optionally
+   against STALE neighbor payloads from a published-version ring
+   (``StalenessSchedule``), the async model the ROADMAP's serve-loop
+   item called for;
+4. **snapshot** — the resident fleet (model + detector + ledger, plus
+   the payload ring when staleness is on) persists through
+   ``CheckpointManager`` so a restart resumes mid-stream.
+
+Every jitted function is owned by the runtime instance and is traced
+exactly once for a given (fleet shape, batch, topology) — masks, tick
+indices, and payload versions are all runtime operands.
+``assert_compile_once()`` turns that property into a hard check the
+soak benchmark enforces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import UV, OSELMState, ae_score
+from repro.federated.selection import FleetMaskFn
+from repro.fleet.fleet import (
+    _fleet_train,
+    _masked_merge_body,
+    fleet_from_uv,
+    fleet_merge_masked_kernel,
+    fleet_to_uv,
+)
+from repro.fleet.staleness import StalenessSchedule, _lagged_gather
+from repro.fleet.topology import Topology
+from repro.runtime.detector import DetectorConfig, detector_update, init_detector
+from repro.runtime.feed import TickFeed
+from repro.runtime.governor import GovernorConfig, MergeDecision, MergeGovernor
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Static configuration of one resident fleet runtime."""
+
+    topology: Topology
+    ridge: float = 1e-3
+    detector: DetectorConfig = dataclasses.field(default_factory=DetectorConfig)
+    governor: GovernorConfig = dataclasses.field(default_factory=GovernorConfig)
+    gate_merges: bool = True          # False: no-quarantine baseline (everyone merges)
+    staleness: StalenessSchedule | None = None
+    use_merge_kernel: bool = False    # route merges through the Pallas family
+    snapshot_every: int | None = None
+    snapshot_dir: str | Path | None = None
+    snapshot_keep: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """What one tick did — the runtime's observable event record."""
+
+    tick: int
+    losses: np.ndarray          # (D,) mean ae_score of the incoming batch
+    drifted: np.ndarray         # (D,) quarantine flags after detection
+    fresh_detections: np.ndarray  # (D,) flags that rose this tick
+    decision: MergeDecision
+    merge_seconds: float | None  # wall-clock of the admitted merge, else None
+
+
+class FleetRuntime:
+    """A live fleet: stacked OS-ELM states + detector bank + governor."""
+
+    def __init__(
+        self,
+        states: OSELMState,
+        config: RuntimeConfig,
+        *,
+        policies: tuple[FleetMaskFn, ...] = (),
+    ) -> None:
+        n_devices = states.beta.shape[0]
+        if config.topology.n_devices != n_devices:
+            raise ValueError(
+                f"topology is for {config.topology.n_devices} devices, "
+                f"fleet has {n_devices}"
+            )
+        if config.staleness is not None and len(config.staleness.lags) != n_devices:
+            raise ValueError("staleness schedule device count mismatch")
+        self.states = states
+        self.config = config
+        self.det = init_detector(n_devices)
+        # NB: on the stacked fleet pytree beta is (D, Ñ, m), so the
+        # scalar-state n_hidden/n_out properties would read (D, Ñ)
+        n_hidden, n_out = states.beta.shape[1], states.beta.shape[2]
+        self.governor = MergeGovernor(
+            config.topology, n_hidden, n_out, config.governor,
+            policies=policies,
+        )
+        self.tick_no = 0
+        self.merge_round = 0
+        self.detections: list[tuple[int, int]] = []   # (tick, device)
+        self.ckpt = (
+            CheckpointManager(config.snapshot_dir, keep=config.snapshot_keep)
+            if config.snapshot_dir is not None else None
+        )
+
+        det_cfg = config.detector
+        topology, ridge = config.topology, config.ridge
+
+        def ingest_detect(fleet, det, batch, rebase, participants):
+            # score BEFORE training: the loss of the incoming data under
+            # the current model is the drift signal (§3.4 / 2203.01077)
+            losses = jax.vmap(lambda s, xb: jnp.mean(ae_score(s, xb)))(fleet, batch)
+            fleet = _fleet_train(fleet, batch)  # k=1 sequential updates
+            det, drifted, fresh = detector_update(
+                det, losses, det_cfg, rebase=rebase, participants=participants
+            )
+            return fleet, det, losses, drifted, fresh
+
+        self._ingest_detect = jax.jit(ingest_detect)
+        # first tick after a merge: participants' bands rebase common-mode
+        self._post_merge = False
+        self._merge_mask = np.ones(n_devices, bool)
+
+        if config.use_merge_kernel:
+            def merge_fresh(fleet, mask):
+                return fleet_merge_masked_kernel(fleet, topology, mask, ridge=ridge)
+        else:
+            def merge_fresh(fleet, mask):
+                return _masked_merge_body(fleet, topology, mask, ridge)
+
+        self._merge_fresh = jax.jit(merge_fresh)
+
+        # ---- staleness-aware merge: published-payload version ring ----
+        self._hist_u = self._hist_v = None
+        if config.staleness is not None:
+            lags = jnp.asarray(config.staleness.lags)
+            n_hist = config.staleness.max_lag + 1
+            m_off = jnp.asarray(topology.dense_matrix()) - jnp.eye(
+                n_devices, dtype=jnp.float32
+            )
+
+            # NB: lagged merges mix via the dense m_off einsum (same
+            # convention as fleet_train_async — each device needs a
+            # DIFFERENT version of each neighbor's payload, which the
+            # sparse Topology.mix paths cannot express). O(D²) per
+            # merge round; prefer staleness=None at large D until a
+            # banded lagged-gather kernel exists.
+            def merge_stale(fleet, hist_u, hist_v, mask, r):
+                fresh = fleet_to_uv(fleet, ridge=ridge)
+                mf = mask.astype(fresh.u.dtype)
+                # publish this round's payload (quarantined devices
+                # publish too — peers just will not mix them in)
+                hist_u = hist_u.at[r % n_hist].set(fresh.u)
+                hist_v = hist_v.at[r % n_hist].set(fresh.v)
+                stale_u = _lagged_gather(hist_u, lags, r) * mf[:, None, None]
+                stale_v = _lagged_gather(hist_v, lags, r) * mf[:, None, None]
+                merged = UV(
+                    u=fresh.u + jnp.einsum("ij,j...->i...", m_off, stale_u),
+                    v=fresh.v + jnp.einsum("ij,j...->i...", m_off, stale_v),
+                )
+                out = fleet_from_uv(fleet, merged, ridge=ridge)
+                keep = (mf > 0)[:, None, None]
+                out = fleet.replace(
+                    beta=jnp.where(keep, out.beta, fleet.beta),
+                    p=jnp.where(keep, out.p, fleet.p),
+                )
+                return out, hist_u, hist_v
+
+            self._merge_stale = jax.jit(merge_stale)
+            # version-0 backfill: until a device has published, peers see
+            # its initial payload (same convention as fleet_train_async)
+            uv0 = jax.jit(lambda s: fleet_to_uv(s, ridge=ridge))(states)
+            self._hist_u = jnp.broadcast_to(uv0.u[None], (n_hist,) + uv0.u.shape)
+            self._hist_v = jnp.broadcast_to(uv0.v[None], (n_hist,) + uv0.v.shape)
+
+    @property
+    def n_devices(self) -> int:
+        return self.det.n_devices
+
+    # ------------------------------------------------------------- tick loop
+
+    def tick(self, batch: np.ndarray) -> TickReport:
+        """Process one serving tick: ingest + detect, then govern and
+        (maybe) merge between ticks, then (maybe) snapshot."""
+        t = self.tick_no
+        self.states, self.det, losses, drifted, fresh = self._ingest_detect(
+            self.states, self.det, jnp.asarray(batch),
+            jnp.asarray(self._post_merge), jnp.asarray(self._merge_mask),
+        )
+        losses_np = np.asarray(losses)
+        drifted_np = np.asarray(drifted)
+        fresh_np = np.asarray(fresh)
+        for dev in np.flatnonzero(fresh_np):
+            self.detections.append((t, int(dev)))
+
+        if self.config.gate_merges:
+            mask = self.governor.participation(drifted_np, losses_np)
+        else:
+            mask = np.ones(self.n_devices, bool)
+        decision = self.governor.decide(t, mask)
+
+        merge_seconds = None
+        if decision.merge:
+            t0 = time.perf_counter()
+            mask_j = jnp.asarray(mask, jnp.float32)
+            if self.config.staleness is not None:
+                self.states, self._hist_u, self._hist_v = self._merge_stale(
+                    self.states, self._hist_u, self._hist_v, mask_j,
+                    jnp.int32(self.merge_round),
+                )
+            else:
+                self.states = self._merge_fresh(self.states, mask_j)
+            jax.block_until_ready(self.states.beta)
+            merge_seconds = time.perf_counter() - t0
+            self.merge_round += 1
+
+        self._post_merge = decision.merge
+        if decision.merge:
+            self._merge_mask = mask.copy()
+        self.tick_no = t + 1
+        if (
+            self.ckpt is not None
+            and self.config.snapshot_every
+            and self.tick_no % self.config.snapshot_every == 0
+        ):
+            self.snapshot()
+        return TickReport(
+            tick=t, losses=losses_np, drifted=drifted_np,
+            fresh_detections=fresh_np, decision=decision,
+            merge_seconds=merge_seconds,
+        )
+
+    def run(self, feed: TickFeed, *, ticks: int | None = None) -> list[TickReport]:
+        """Drive the runtime over a feed (all of it by default)."""
+        n = feed.n_ticks if ticks is None else min(ticks, feed.n_ticks)
+        return [self.tick(feed.tick_batch(t)) for t in range(n)]
+
+    # ------------------------------------------------------------ durability
+
+    def _snapshot_tree(self):
+        tree = {
+            "states": self.states,
+            "det": self.det,
+            # host-side counters stay numpy (int64-exact through npz)
+            "tick": np.asarray(self.tick_no, np.int64),
+            "merge_round": np.asarray(self.merge_round, np.int64),
+            "gov": np.asarray(
+                [self.governor.state.ticks, self.governor.state.merges,
+                 self.governor.state.bytes_spent,
+                 self.governor.state.deferred_budget,
+                 self.governor.state.deferred_participants], np.int64,
+            ),
+            # (N, 2) detection ledger; restored whole (shape may differ
+            # from the template's — the numpy restore path allows that)
+            "detections": np.asarray(self.detections, np.int64).reshape(-1, 2),
+            "post_merge": np.asarray(self._post_merge, np.int32),
+            "merge_mask": np.asarray(self._merge_mask, np.int32),
+        }
+        if self._hist_u is not None:
+            tree["hist_u"] = self._hist_u
+            tree["hist_v"] = self._hist_v
+        return tree
+
+    def snapshot(self) -> Path:
+        if self.ckpt is None:
+            raise RuntimeError("runtime has no snapshot_dir configured")
+        return self.ckpt.save(self.tick_no, self._snapshot_tree())
+
+    def restore(self, step: int | None = None) -> int:
+        """Load the latest (or a specific) snapshot into the live
+        runtime; returns the restored tick number."""
+        if self.ckpt is None:
+            raise RuntimeError("runtime has no snapshot_dir configured")
+        tree, _ = self.ckpt.restore(self._snapshot_tree(), step)
+        self.states = tree["states"]
+        self.det = tree["det"]
+        self.tick_no = int(tree["tick"])
+        self.merge_round = int(tree["merge_round"])
+        gov = np.asarray(tree["gov"])
+        self.governor.state.ticks = int(gov[0])
+        self.governor.state.merges = int(gov[1])
+        self.governor.state.bytes_spent = int(gov[2])
+        self.governor.state.deferred_budget = int(gov[3])
+        self.governor.state.deferred_participants = int(gov[4])
+        self.detections = [
+            (int(t), int(d)) for t, d in np.asarray(tree["detections"])
+        ]
+        self._post_merge = bool(int(tree["post_merge"]))
+        self._merge_mask = np.asarray(tree["merge_mask"]).astype(bool)
+        if self._hist_u is not None:
+            self._hist_u = tree["hist_u"]
+            self._hist_v = tree["hist_v"]
+        return self.tick_no
+
+    # ---------------------------------------------------------- compile-once
+
+    def jit_cache_sizes(self) -> dict[str, int]:
+        sizes = {
+            "ingest_detect": self._ingest_detect._cache_size(),
+            "merge_fresh": self._merge_fresh._cache_size(),
+        }
+        if self.config.staleness is not None:
+            sizes["merge_stale"] = self._merge_stale._cache_size()
+        return sizes
+
+    def assert_compile_once(self) -> dict[str, int]:
+        """The tick loop must be a compile-once path: every runtime-owned
+        jitted function has at most one trace. Raises on retracing."""
+        sizes = self.jit_cache_sizes()
+        bad = {k: v for k, v in sizes.items() if v > 1}
+        if bad:
+            raise AssertionError(f"per-tick retracing detected: {bad}")
+        return sizes

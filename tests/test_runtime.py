@@ -1,0 +1,508 @@
+"""Resident runtime tests: sequential drift detector (false-positive
+rate, detection, re-admission, common-mode rebase), masked-participation
+merges (reference + Pallas kernels), the merge governor's comm-budget
+SLO, staleness validation, and the end-to-end quarantine AUC claim."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_har_dataset
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays, train_test_split
+from repro.data.synthetic import AnomalyDataset
+from repro.fleet import (
+    DriftEvent,
+    StalenessSchedule,
+    all_to_all,
+    fleet_merge,
+    fleet_merge_masked,
+    fleet_merge_masked_kernel,
+    fleet_score,
+    fleet_train,
+    fleet_train_async,
+    hierarchical,
+    init_fleet,
+    make_fleet_streams,
+    random_drift_schedule,
+    ring,
+    star,
+)
+from repro.fleet.staleness import _lagged_gather
+from repro.runtime import (
+    DetectorConfig,
+    FleetRuntime,
+    GovernorConfig,
+    MergeGovernor,
+    RuntimeConfig,
+    TickFeed,
+    detector_update,
+    init_detector,
+)
+
+D, H, RIDGE = 12, 8, 1e-3
+H_RT = 16  # runtime-scenario detector width (matches the soak benchmark)
+
+
+# ------------------------------------------------------------------- detector
+
+
+def _scan_detector(losses, cfg, state=None):
+    """Run detector_update over a (T, D) loss matrix; returns final
+    state plus the (T, D) drifted/fresh trajectories."""
+    state = init_detector(losses.shape[1]) if state is None else state
+
+    def step(s, x):
+        s, drifted, fresh = detector_update(s, x, cfg)
+        return s, (drifted, fresh)
+
+    return jax.lax.scan(step, state, jnp.asarray(losses))
+
+
+def test_detector_stationary_false_positive_rate():
+    """Acceptance satellite: on stationary streams the sequential
+    detector must not fire — zero flags over 64 devices × 400 ticks."""
+    rng = np.random.default_rng(0)
+    losses = rng.gamma(4.0, 2.5e-4, size=(400, 64)).astype(np.float32)
+    cfg = DetectorConfig()
+    _, (drifted, fresh) = _scan_detector(losses, cfg)
+    assert int(np.asarray(fresh).sum()) == 0
+    assert not bool(np.asarray(drifted)[-1].any())
+
+
+def test_detector_flags_step_change_fast_then_readmits():
+    rng = np.random.default_rng(1)
+    base = rng.gamma(4.0, 2.5e-4, size=(200, 4)).astype(np.float32)
+    losses = base.copy()
+    losses[100:140, 2] *= 12.0  # device 2 drifts, then re-converges
+    cfg = DetectorConfig()
+    _, (drifted, fresh) = _scan_detector(losses, cfg)
+    drifted = np.asarray(drifted)
+    fresh = np.asarray(fresh)
+    first = int(np.flatnonzero(fresh[:, 2])[0])
+    assert 100 <= first <= 105  # detected within a few ticks
+    assert fresh[:, [0, 1, 3]].sum() == 0  # nobody else flagged
+    assert drifted[120, 2]  # quarantined while drifted
+    # re-converged at 140 → re-admitted after the hysteresis patience
+    assert not drifted[140 + cfg.patience + 8, 2]
+
+
+def test_detector_rebase_absorbs_common_mode_shift():
+    """A post-merge loss step shared by the fleet must not flag when the
+    runtime marks the rebase tick — and must flag when it does not."""
+    rng = np.random.default_rng(2)
+    losses = rng.gamma(16.0, 1e-4, size=(60, 8)).astype(np.float32)
+    cfg = DetectorConfig()
+    state, _ = _scan_detector(losses, cfg)
+    shifted = jnp.asarray(losses[-1] * 5.0)  # fleet-wide 5x step
+
+    s_rebase, drifted, fresh = detector_update(state, shifted, cfg, rebase=True)
+    assert int(np.asarray(fresh).sum()) == 0
+    # the band followed the common-mode shift
+    assert float(np.asarray(s_rebase.mean).mean()) > float(np.asarray(state.mean).mean()) * 3
+
+    def step(s, x):
+        s, d, f = detector_update(s, x, cfg)
+        return s, f
+
+    _, fresh_traj = jax.lax.scan(
+        step, state, jnp.tile(shifted[None], (4, 1))
+    )
+    assert bool(np.asarray(fresh_traj).any())  # without rebase: flags
+
+
+def test_detector_rebase_keeps_idiosyncratic_drift_detectable():
+    rng = np.random.default_rng(3)
+    losses = rng.gamma(16.0, 1e-4, size=(60, 8)).astype(np.float32)
+    cfg = DetectorConfig()
+    state, _ = _scan_detector(losses, cfg)
+    shifted = losses[-1] * 2.0
+    shifted[5] = losses[-1][5] * 40.0  # device 5 genuinely drifts
+    s1, _, fresh1 = detector_update(state, jnp.asarray(shifted), cfg, rebase=True)
+    assert int(np.asarray(fresh1).sum()) == 0  # rebase tick never flags
+    s2, _, fresh2 = detector_update(s1, jnp.asarray(shifted), cfg)
+    assert bool(np.asarray(fresh2)[5])  # ...but the outlier fires next tick
+    assert int(np.asarray(fresh2).sum()) == 1
+
+
+# ---------------------------------------------------------------- masked merge
+
+
+@pytest.fixture(scope="module")
+def trained_fleet():
+    key = jax.random.PRNGKey(0)
+    ds = make_har_dataset(seed=0, samples_per_class=60, n_features=48)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    ds = ds._replace(x=((ds.x - lo) / (hi - lo + 1e-6)).astype(np.float32))
+    mask = ds.y < 2
+    ds2 = AnomalyDataset(ds.name, ds.x[mask], ds.y[mask], ds.class_names[:2])
+    fs = make_fleet_streams(ds2, D, 24, n_init=2 * H, seed=0)
+    fleet = init_fleet(
+        key, D, ds2.n_features, H, fs.x_init, activation="identity", ridge=RIDGE
+    )
+    return fleet_train(fleet, fs.xs)
+
+
+TOPOLOGIES = [
+    ("all_to_all", lambda: all_to_all(D)),
+    ("star", lambda: star(D)),
+    ("ring2", lambda: ring(D, hops=2)),
+    ("hier", lambda: hierarchical(D, 3)),
+    ("hier_iso", lambda: hierarchical(D, 3, head_exchange=False)),
+]
+
+
+@pytest.mark.parametrize("topo_fn", [f for _, f in TOPOLOGIES],
+                         ids=[n for n, _ in TOPOLOGIES])
+def test_masked_merge_all_ones_equals_fleet_merge(trained_fleet, topo_fn):
+    topo = topo_fn()
+    ref = fleet_merge(trained_fleet, topo, ridge=RIDGE)
+    out = fleet_merge_masked(trained_fleet, topo, jnp.ones(D), ridge=RIDGE)
+    np.testing.assert_allclose(
+        np.asarray(out.beta), np.asarray(ref.beta), rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.p), np.asarray(ref.p), rtol=1e-5, atol=1e-6
+    )
+
+
+@pytest.mark.parametrize("topo_fn", [f for _, f in TOPOLOGIES],
+                         ids=[n for n, _ in TOPOLOGIES])
+def test_masked_merge_quarantines_and_matches_subfleet(trained_fleet, topo_fn):
+    topo = topo_fn()
+    mask = jnp.ones(D).at[3].set(0).at[8].set(0)
+    out = fleet_merge_masked(trained_fleet, topo, mask, ridge=RIDGE)
+    # quarantined devices keep their own model bit-for-bit
+    for d in (3, 8):
+        np.testing.assert_array_equal(
+            np.asarray(out.beta[d]), np.asarray(trained_fleet.beta[d])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out.p[d]), np.asarray(trained_fleet.p[d])
+        )
+    # participants merged exactly the participating sub-fleet (checked
+    # against a hand-built dense masked mix on the all-to-all case)
+    if topo.name == "all_to_all":
+        from repro.fleet import fleet_from_uv, fleet_to_uv
+
+        uv = fleet_to_uv(trained_fleet, ridge=RIDGE)
+        mf = np.asarray(mask)[:, None, None]
+        su = (np.asarray(uv.u) * mf).sum(0)
+        sv = (np.asarray(uv.v) * mf).sum(0)
+        from repro.core import UV
+
+        ref = fleet_from_uv(
+            trained_fleet,
+            UV(u=jnp.broadcast_to(su, uv.u.shape), v=jnp.broadcast_to(sv, uv.v.shape)),
+            ridge=RIDGE,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out.beta[0]), np.asarray(ref.beta[0]), rtol=1e-4, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("topo_fn", [f for _, f in TOPOLOGIES],
+                         ids=[n for n, _ in TOPOLOGIES])
+def test_masked_merge_kernel_matches_reference(trained_fleet, topo_fn):
+    topo = topo_fn()
+    mask = jnp.ones(D).at[1].set(0).at[6].set(0).at[7].set(0)
+    ref = fleet_merge_masked(trained_fleet, topo, mask, ridge=RIDGE)
+    out = fleet_merge_masked_kernel(trained_fleet, topo, mask, ridge=RIDGE)
+    np.testing.assert_allclose(
+        np.asarray(out.beta), np.asarray(ref.beta), rtol=1e-3, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(out.p), np.asarray(ref.p), rtol=1e-3, atol=1e-4
+    )
+
+
+def test_masked_segment_sum_kernel_matches_segment_sum():
+    from repro.kernels.topology_merge import masked_segment_sum_mix
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(10, 8, 24)).astype(np.float32))
+    cids = np.repeat(np.arange(4), [3, 3, 2, 2]).astype(np.int32)
+    mask = jnp.asarray(rng.integers(0, 2, size=10).astype(np.float32))
+    out = masked_segment_sum_mix(x, cids, mask, 4)
+    ref = jax.ops.segment_sum(x * mask[:, None, None], jnp.asarray(cids), num_segments=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="sorted"):
+        masked_segment_sum_mix(x, cids[::-1].copy(), mask, 4)
+
+
+# ------------------------------------------------------------------- governor
+
+
+def test_governor_budget_defers_and_recovers():
+    topo = star(16)
+    gov = MergeGovernor(
+        topo, H, 48,
+        GovernorConfig(merge_every=4, budget_bytes_per_tick=None),
+    )
+    mask = np.ones(16, bool)
+    assert not gov.decide(0, mask).merge      # off-cadence
+    assert gov.decide(3, mask).merge          # cadence tick, no budget cap
+    full = gov.round_bytes(16)
+
+    tight = MergeGovernor(
+        topo, H, 48,
+        GovernorConfig(merge_every=4, budget_bytes_per_tick=full / 7.0),
+    )
+    d0 = tight.decide(3, mask)                # full/4 per tick > full/7 → defer
+    assert not d0.merge and d0.reason == "budget"
+    d1 = tight.decide(7, mask)                # full/8 per tick ≤ full/7 → merge
+    assert d1.merge
+    assert tight.state.deferred_budget == 1
+    assert tight.state.bytes_spent == full
+    # participation scales the admitted round's cost
+    assert tight.round_bytes(8) == full // 2
+
+
+def test_governor_min_participants():
+    gov = MergeGovernor(star(8), H, 48, GovernorConfig(merge_every=1, min_participants=3))
+    d = gov.decide(0, np.asarray([True, True] + [False] * 6))
+    assert not d.merge and d.reason == "participants"
+
+
+# ------------------------------------------------------------------ staleness
+
+
+def test_staleness_schedule_validation():
+    with pytest.raises(ValueError, match=">= 0"):
+        StalenessSchedule(np.asarray([0, -1, 2]))
+    with pytest.raises(ValueError, match="vector"):
+        StalenessSchedule(np.zeros((2, 2), np.int32))
+
+
+def test_lagged_gather_rejects_short_history():
+    hist = jnp.zeros((2, 4, 3, 3))
+    with pytest.raises(ValueError, match="history"):
+        _lagged_gather(hist, jnp.asarray([0, 1, 2, 0]), 5)
+    # in-range lags pass
+    _lagged_gather(hist, jnp.asarray([0, 1, 1, 0]), 5)
+
+
+def test_fleet_train_async_history_validation(trained_fleet):
+    xs = jnp.zeros((D, 8, trained_fleet.params.alpha.shape[0]))
+    sched = StalenessSchedule.uniform(D, 2)
+    with pytest.raises(ValueError, match="history"):
+        fleet_train_async(
+            trained_fleet, xs, star(D), sched, rounds=2, ridge=RIDGE, history=2
+        )
+
+
+# ------------------------------------------------------------------ partition
+
+
+def test_drift_schedule_targets_and_homes():
+    drift = random_drift_schedule(
+        24, 80, 3, frac=0.5, seed=0, home_classes=2, targets=(2,)
+    )
+    assert len(drift) == 12
+    for ev in drift:
+        assert ev.new_pattern == 2
+        assert 20 <= ev.step < 60
+
+
+def test_make_fleet_streams_n_assign():
+    ds = make_har_dataset(seed=0, samples_per_class=60, n_features=48)
+    sub = ds.y < 3
+    ds3 = AnomalyDataset(ds.name, ds.x[sub], ds.y[sub], ds.class_names[:3])
+    drift = (DriftEvent(device=1, step=10, new_pattern=2),)
+    fs = make_fleet_streams(ds3, 4, 20, n_init=4, drift=drift, seed=0, n_assign=2)
+    # homes round-robin over the first 2 patterns only...
+    for d in range(4):
+        assert fs.initial_pattern(d) == d % 2
+    assert (fs.pattern_of_device[[0, 2, 3]] < 2).all()
+    # ...while drift may target the held-out pattern 2
+    assert (fs.pattern_of_device[1, 10:] == 2).all()
+    with pytest.raises(ValueError, match="n_assign"):
+        make_fleet_streams(ds3, 4, 20, n_assign=9)
+
+
+# -------------------------------------------------------------------- runtime
+
+
+def _har3():
+    # full-width HAR: the reduced feature grids cap the achievable AUC
+    # well below the level the gating claim is asserted against
+    ds = make_har_dataset(seed=0, samples_per_class=100)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    ds = ds._replace(x=((ds.x - lo) / (hi - lo + 1e-6)).astype(np.float32))
+    train, test = train_test_split(ds, 0.8, seed=0)
+
+    def sub(d):
+        m = d.y < 3
+        return AnomalyDataset(d.name, d.x[m], d.y[m], d.class_names[:3])
+
+    return sub(train), sub(test)
+
+
+@pytest.fixture(scope="module")
+def drift_scenario():
+    """16 devices, 120 ticks, 4 devices drift to the held-out pattern.
+
+    Drift lands mid-soak (ticks 50–66), late enough that the quarantine
+    governs several of the remaining merge rounds. That window is what
+    the gating claim is about: once a drifted device re-converges and
+    is re-admitted, its payload is legitimately shared (the paper's
+    concept-following) and gated / ungated fleets converge again — the
+    protection is the span between detection and re-admission."""
+    train3, test3 = _har3()
+    ticks, batch = 120, 2
+    steps = ticks * batch
+    drift = tuple(
+        DriftEvent(device=d, step=100 + 11 * i, new_pattern=2)
+        for i, d in enumerate((2, 5, 8, 14))
+    )
+    fs = make_fleet_streams(
+        train3, 16, steps, n_init=2 * H_RT, drift=drift, seed=0, n_assign=2
+    )
+    x_eval, y_eval = anomaly_eval_arrays(test3, [0, 1], anomaly_ratio=0.3, seed=0)
+    return train3, fs, jnp.asarray(x_eval), y_eval, batch
+
+
+def _run_runtime(fs, n_features, batch, *, gate, **cfg_kw):
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), fs.n_devices, n_features, H_RT, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    cfg = RuntimeConfig(
+        topology=ring(fs.n_devices, hops=2), ridge=RIDGE,
+        governor=GovernorConfig(merge_every=16), gate_merges=gate, **cfg_kw,
+    )
+    rt = FleetRuntime(fleet, cfg)
+    rt.run(TickFeed(fs, batch))
+    return rt
+
+
+def test_runtime_quarantine_recovers_post_merge_auc(drift_scenario):
+    """The ROADMAP's drift-adaptive-selection claim, quantified: with
+    quarantine the clean devices' post-merge AUC against the drifted
+    concept beats the merge-everyone baseline."""
+    train3, fs, x_eval, y_eval, batch = drift_scenario
+    gated = _run_runtime(fs, train3.n_features, batch, gate=True)
+    ungated = _run_runtime(fs, train3.n_features, batch, gate=False)
+
+    drifted_devs = {ev.device for ev in fs.drift}
+    clean = [d for d in range(fs.n_devices) if d not in drifted_devs]
+
+    def clean_auc(rt):
+        scores = np.asarray(fleet_score(rt.states, x_eval))
+        return float(np.mean([roc_auc(scores[d], y_eval) for d in clean]))
+
+    auc_gated, auc_ungated = clean_auc(gated), clean_auc(ungated)
+    assert auc_gated > auc_ungated, (auc_gated, auc_ungated)
+    # sanity floor for this small fixture; the absolute >0.9 claim is
+    # asserted at D=256 scale by benchmarks/serve_runtime.py
+    assert auc_gated > 0.8
+    # gated run detected every injected drift, flagged nobody else
+    flagged = {dev for _, dev in gated.detections}
+    assert flagged == drifted_devs
+    # and quarantined rounds shipped fewer bytes
+    assert gated.governor.state.bytes_spent < ungated.governor.state.bytes_spent
+
+
+def test_runtime_compile_once(drift_scenario):
+    train3, fs, _, _, batch = drift_scenario
+    rt = _run_runtime(fs, train3.n_features, batch, gate=True)
+    sizes = rt.assert_compile_once()
+    assert all(v == 1 for v in sizes.values())
+
+
+def test_runtime_snapshot_restore_roundtrip(tmp_path, drift_scenario):
+    train3, fs, _, _, batch = drift_scenario
+
+    def fresh(snapdir):
+        fleet = init_fleet(
+            jax.random.PRNGKey(0), fs.n_devices, train3.n_features, H_RT, fs.x_init,
+            activation="identity", ridge=RIDGE,
+        )
+        cfg = RuntimeConfig(
+            topology=ring(fs.n_devices, hops=2), ridge=RIDGE,
+            governor=GovernorConfig(merge_every=16),
+            snapshot_every=20, snapshot_dir=snapdir,
+        )
+        return FleetRuntime(fleet, cfg)
+
+    rt = fresh(tmp_path)
+    feed = TickFeed(fs, batch)
+    rt.run(feed, ticks=40)
+    rt.snapshot()
+
+    rt2 = fresh(tmp_path)
+    assert rt2.restore() == 40
+    np.testing.assert_array_equal(np.asarray(rt2.states.beta), np.asarray(rt.states.beta))
+    np.testing.assert_array_equal(np.asarray(rt2.det.ewma), np.asarray(rt.det.ewma))
+    np.testing.assert_array_equal(
+        np.asarray(rt2.det.drifted), np.asarray(rt.det.drifted)
+    )
+    assert rt2.tick_no == rt.tick_no
+    assert rt2.governor.state.merges == rt.governor.state.merges
+    assert rt2.governor.state.bytes_spent == rt.governor.state.bytes_spent
+    # the restored runtime continues ticking where the original left off
+    rep = rt2.tick(feed.tick_batch(40))
+    assert rep.tick == 40
+
+
+def test_runtime_stale_zero_lag_matches_fresh(drift_scenario):
+    """A staleness-aware runtime with all-zero lags reproduces the fresh
+    masked-merge path exactly (same invariant as fleet_train_async)."""
+    train3, fs, _, _, batch = drift_scenario
+    fresh_rt = _run_runtime(fs, train3.n_features, batch, gate=True)
+    stale_rt = _run_runtime(
+        fs, train3.n_features, batch, gate=True,
+        staleness=StalenessSchedule.uniform(fs.n_devices, 0),
+    )
+    np.testing.assert_allclose(
+        np.asarray(stale_rt.states.beta), np.asarray(fresh_rt.states.beta),
+        rtol=1e-4, atol=1e-5,
+    )
+    assert stale_rt.assert_compile_once()
+
+
+def test_runtime_lagged_merges_stay_finite(drift_scenario):
+    train3, fs, _, _, batch = drift_scenario
+    rt = _run_runtime(
+        fs, train3.n_features, batch, gate=True,
+        staleness=StalenessSchedule.random(fs.n_devices, max_lag=2, seed=1),
+    )
+    assert bool(jnp.isfinite(rt.states.beta).all())
+    assert rt.governor.state.merges > 0
+
+
+# ---------------------------------------------------------------------- feed
+
+
+def test_tick_feed_shapes_and_drift_ticks():
+    train3, _ = _har3()
+    drift = (DriftEvent(device=1, step=13, new_pattern=2),)
+    fs = make_fleet_streams(train3, 4, 26, n_init=4, drift=drift, seed=0, n_assign=2)
+    feed = TickFeed(fs, batch=4)
+    assert feed.n_ticks == 6  # 26 // 4, tail dropped
+    assert feed.tick_batch(0).shape == (4, 4, train3.n_features)
+    assert feed.drift_ticks() == {1: 3}  # step 13 → tick 3
+    with pytest.raises(IndexError):
+        feed.tick_batch(6)
+    with pytest.raises(ValueError):
+        TickFeed(fs, batch=0)
+    with pytest.raises(ValueError):
+        TickFeed(fs, batch=27)
+
+
+def test_runtime_rejects_mismatched_topology(drift_scenario):
+    train3, fs, _, _, _ = drift_scenario
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), fs.n_devices, train3.n_features, H_RT, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    with pytest.raises(ValueError, match="topology"):
+        FleetRuntime(fleet, RuntimeConfig(topology=ring(fs.n_devices + 1, hops=1)))
+
+
+def test_detector_config_frozen():
+    cfg = DetectorConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.alpha = 0.5
