@@ -1,0 +1,213 @@
+"""Fleet-ingest benchmark — fused tick ingest vs the vmap+scan baseline.
+
+The per-tick training hot path (``FleetRuntime.tick`` ingest: pre-train
+``ae_score`` drift signal + k=1 sequential updates over the tick
+window) in three lowerings, at fleet scale D ∈ {256, 1024, 4096}:
+
+- ``baseline`` — what the runtime shipped before this kernel existed: a
+  separate scoring pass then ``vmap``-of-``lax.scan`` over single-sample
+  RLS steps. Every sample round-trips P (Ñ×Ñ) and β (Ñ×m) through HBM.
+- ``fused``    — ``repro.kernels.fleet_ingest.fleet_ingest_xla``: ONE
+  pass (batched hidden projections, score re-used as the update's
+  innovation, block-Woodbury exact k=1 chain). This is the ingest the
+  runtime executes on this backend (the CPU lowering of the kernel
+  dataflow), and the path the wall-clock assert gates.
+- ``pallas``   — ``fleet_ingest_kernel`` under interpret=True, timed at
+  the smallest grid size for visibility only (the interpreter is a
+  correctness vehicle on CPU; Mosaic timings on real TPUs are the
+  ROADMAP's remaining item — same caveat as the merge kernels).
+
+Asserted claims (same style as ``fleet_scale.py --merge-bench``):
+  - all three lowerings agree with the sequential reference,
+  - the fused ingest beats the vmap+scan baseline wall-clock at
+    D ≥ 1024 on this backend,
+  - accounting: the fused path moves ~T× less per-tick state traffic
+    (P/β touched once per window, not once per sample).
+
+Writes ``BENCH_fleet_ingest.json`` and appends the run to
+``BENCH_history.jsonl`` (``benchmarks.history``). Standalone runs (the
+CI smoke step) also GATE: >25% wall-clock regression vs the previous
+same-backend baseline fails the run — the first run seeds the
+baseline. Under ``benchmarks.run`` the gate is the harness's opt-in
+``--check-regression`` flag instead.
+
+    PYTHONPATH=src python benchmarks/fleet_ingest.py [--smoke]
+    PYTHONPATH=src python -m benchmarks.fleet_ingest [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/fleet_ingest.py` from repo root
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import timed
+from benchmarks.history import record, record_and_gate
+from repro.core import ae_score
+from repro.fleet import init_fleet
+from repro.fleet.fleet import _fleet_train
+from repro.kernels.fleet_ingest import fleet_ingest_kernel, fleet_ingest_xla
+
+INGEST_GRID = (256, 1024, 4096)     # the tentpole's D sweep
+INGEST_GRID_SMOKE = (256, 1024)     # CI still covers the asserted D=1024 win
+N_HIDDEN = 32                       # runtime soak width (serve_runtime.py)
+N_FEATURES = 64
+TICK_SAMPLES = 32                   # per-device window per tick
+PALLAS_LIMIT = 256                  # interpret-mode timing cap (visibility only)
+ASSERT_AT = 1024                    # fused must beat baseline from here up
+
+
+def _make_fleet(n_dev: int, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    x_init = jax.random.uniform(key, (n_dev, 2 * N_HIDDEN, N_FEATURES))
+    fleet = init_fleet(
+        key, n_dev, N_FEATURES, N_HIDDEN, x_init,
+        activation="identity", ridge=1e-3,
+    )
+    window = jax.random.uniform(
+        jax.random.PRNGKey(seed + 1), (n_dev, TICK_SAMPLES, N_FEATURES)
+    )
+    return fleet, window
+
+
+@jax.jit
+def _baseline_ingest(fleet, window):
+    """The pre-kernel runtime ingest: score pass + vmap-of-scan train."""
+    losses = jax.vmap(lambda s, xb: jnp.mean(ae_score(s, xb)))(fleet, window)
+    return _fleet_train(fleet, window), losses
+
+
+def _state_traffic_bytes(n_dev: int, per_sample: bool) -> int:
+    """Per-tick HBM traffic of the (P, β) state: read + write, once per
+    sample for the scan baseline vs once per window for the fused path."""
+    floats = N_HIDDEN * N_HIDDEN + N_HIDDEN * N_FEATURES  # P + β per device
+    touches = TICK_SAMPLES if per_sample else 1
+    return 2 * 4 * n_dev * floats * touches
+
+
+def run_bench(device_grid: tuple[int, ...] = INGEST_GRID, seed: int = 0) -> dict:
+    rows = []
+    for n_dev in device_grid:
+        fleet, window = _make_fleet(n_dev, seed)
+
+        base_states, base_losses = _baseline_ingest(fleet, window)
+        fused_states, fused_losses = fleet_ingest_xla(fleet, window)
+        # all lowerings must agree with the sequential reference
+        np.testing.assert_allclose(
+            np.asarray(fused_states.beta), np.asarray(base_states.beta),
+            rtol=1e-4, atol=1e-5,
+        )
+        np.testing.assert_allclose(
+            np.asarray(fused_losses), np.asarray(base_losses),
+            rtol=1e-5, atol=1e-7,
+        )
+
+        base_us = timed(_baseline_ingest, fleet, window, warmup=1, iters=5)
+        fused_us = timed(fleet_ingest_xla, fleet, window, warmup=1, iters=5)
+
+        pallas_us = None
+        if n_dev <= PALLAS_LIMIT:
+            pk_states, pk_losses = fleet_ingest_kernel(fleet, window, interpret=True)
+            np.testing.assert_allclose(
+                np.asarray(pk_states.beta), np.asarray(base_states.beta),
+                rtol=1e-4, atol=1e-5,
+            )
+            np.testing.assert_allclose(
+                np.asarray(pk_losses), np.asarray(base_losses),
+                rtol=1e-5, atol=1e-7,
+            )
+            pallas_us = timed(
+                lambda f, w: fleet_ingest_kernel(f, w, interpret=True),
+                fleet, window, warmup=1, iters=3,
+            )
+
+        samples = n_dev * TICK_SAMPLES
+        rows.append({
+            "n_devices": n_dev,
+            "tick_samples": TICK_SAMPLES,
+            "baseline_us": base_us,
+            "fused_us": fused_us,
+            "pallas_interpret_us": pallas_us,
+            "speedup": base_us / fused_us,
+            "samples_per_sec_baseline": samples / (base_us * 1e-6),
+            "samples_per_sec_fused": samples / (fused_us * 1e-6),
+            "samples_per_sec_per_device_fused":
+                TICK_SAMPLES / (fused_us * 1e-6),
+            "state_bytes_baseline": _state_traffic_bytes(n_dev, per_sample=True),
+            "state_bytes_fused": _state_traffic_bytes(n_dev, per_sample=False),
+        })
+    return {
+        "n_hidden": N_HIDDEN,
+        "n_features": N_FEATURES,
+        "tick_samples": TICK_SAMPLES,
+        "backend": jax.default_backend(),
+        "device_grid": list(device_grid),
+        "rows": rows,
+    }
+
+
+def main(
+    device_grid: tuple[int, ...] = INGEST_GRID,
+    out_path: str = "BENCH_fleet_ingest.json",
+    history_path: str = "BENCH_history.jsonl",
+    gate: bool = False,
+) -> list[str]:
+    report = run_bench(device_grid=device_grid)
+    # persist the measurements BEFORE asserting on them, so a perf
+    # regression still leaves the artifact needed to debug it
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+    lines = []
+    metrics: dict[str, float] = {}
+    for r in report["rows"]:
+        d = r["n_devices"]
+        pallas = (
+            f"{r['pallas_interpret_us']:.1f}" if r["pallas_interpret_us"] else "n/a"
+        )
+        lines.append(
+            f"fleet_ingest/d{d},"
+            f"{r['fused_us']:.1f},"
+            f"baseline_us={r['baseline_us']:.1f};speedup={r['speedup']:.2f};"
+            f"samples_per_sec={r['samples_per_sec_fused']:.0f};"
+            f"pallas_interpret_us={pallas};"
+            f"state_bytes_ratio={r['state_bytes_baseline'] / r['state_bytes_fused']:.0f}"
+        )
+        metrics[f"fused_d{d}_us"] = r["fused_us"]
+        metrics[f"baseline_d{d}_us"] = r["baseline_us"]
+        # fused state traffic is T× lighter by construction at every size
+        assert r["state_bytes_fused"] < r["state_bytes_baseline"], r
+        # ...and the fused ingest must win the wall-clock at scale
+        if d >= ASSERT_AT:
+            assert r["fused_us"] < r["baseline_us"], r
+    # trajectory: append this run; standalone/CI invocations gate on a
+    # >25% wall-clock regression vs the previous same-backend baseline
+    # (first run seeds it), while the benchmarks.run harness records
+    # only — its regression gate is the opt-in --check-regression flag
+    if gate:
+        record_and_gate("fleet_ingest", metrics, path=history_path)
+    else:
+        record("fleet_ingest", metrics, path=history_path)
+    lines.append(f"# ingest-bench artifact → {out_path} (history → {history_path})")
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="smaller grid (D ≤ 1024) for CI; still asserts the D=1024 win",
+    )
+    ap.add_argument("--out", default="BENCH_fleet_ingest.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    args = ap.parse_args()
+    grid = INGEST_GRID_SMOKE if args.smoke else INGEST_GRID
+    for line in main(grid, args.out, args.history, gate=True):
+        print(line)
+    print(f"# fleet_ingest ok — grid {grid}")

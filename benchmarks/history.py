@@ -1,0 +1,131 @@
+"""Benchmark trajectory: append-only JSONL history + regression gate.
+
+Every harness run appends one summary line per benchmark to
+``BENCH_history.jsonl`` ({bench, timestamp, backend, metrics}) so the
+wall-clock trajectory of the hot paths survives across runs — locally
+across working sessions, in CI across workflow runs (the file is
+persisted through the actions cache).
+
+``check_regression`` compares a fresh set of wall-clock metrics (keys
+ending in ``_us``) against the MOST RECENT prior entry of the same
+benchmark on the same backend and fails on a >``threshold`` slowdown
+of any shared metric. The first run of a benchmark seeds the baseline
+(nothing to compare against); a metric that disappears or appears is
+ignored — only like-for-like keys gate.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+DEFAULT_PATH = "BENCH_history.jsonl"
+DEFAULT_THRESHOLD = 0.25  # fail on >25% wall-clock regression
+
+
+def _load_last(path: str | Path, bench: str, backend: str) -> dict | None:
+    """Most recent prior entry for (bench, backend) that is usable as a
+    baseline, or None. Entries recorded by a FAILING gate carry
+    ``"regressed": true`` and are skipped — a regression that fired must
+    not ratchet the baseline to the regressed level on the next run."""
+    p = Path(path)
+    if not p.exists():
+        return None
+    last = None
+    for line in p.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            entry = json.loads(line)
+        except json.JSONDecodeError:
+            continue  # a torn write must not wedge every future run
+        if (
+            entry.get("bench") == bench
+            and entry.get("backend") == backend
+            and not entry.get("regressed", False)
+        ):
+            last = entry
+    return last
+
+
+def record(
+    bench: str,
+    metrics: dict[str, float],
+    *,
+    path: str | Path = DEFAULT_PATH,
+    regressed: bool = False,
+) -> dict | None:
+    """Append one history line; returns the PREVIOUS baseline entry for
+    the same (bench, backend) — what ``check_regression`` gates against
+    — or None when this run seeds it. ``regressed=True`` marks the
+    entry as a failing run's measurement: kept for debugging, never
+    served as a future baseline."""
+    backend = jax.default_backend()
+    prev = _load_last(path, bench, backend)
+    entry = {
+        "bench": bench,
+        "timestamp": time.time(),
+        "backend": backend,
+        "metrics": {k: float(v) for k, v in metrics.items()},
+    }
+    if regressed:
+        entry["regressed"] = True
+    with open(path, "a") as fh:
+        fh.write(json.dumps(entry) + "\n")
+    return prev
+
+
+def check_regression(
+    prev: dict | None,
+    metrics: dict[str, float],
+    *,
+    threshold: float = DEFAULT_THRESHOLD,
+) -> list[str]:
+    """Wall-clock regression report vs a prior entry.
+
+    Compares every shared key ending in ``_us``; returns one line per
+    metric that got more than ``threshold`` slower. Empty list = pass
+    (including the baseline-seeding first run, prev=None)."""
+    if prev is None:
+        return []
+    failures = []
+    for key, new_val in metrics.items():
+        if not key.endswith("_us"):
+            continue
+        old_val = prev.get("metrics", {}).get(key)
+        if old_val is None or old_val <= 0:
+            continue
+        ratio = float(new_val) / float(old_val)
+        if ratio > 1.0 + threshold:
+            failures.append(
+                f"{key}: {old_val:.1f}us -> {float(new_val):.1f}us "
+                f"({(ratio - 1.0) * 100:.0f}% slower, limit "
+                f"{threshold * 100:.0f}%)"
+            )
+    return failures
+
+
+def record_and_gate(
+    bench: str,
+    metrics: dict[str, float],
+    *,
+    path: str | Path = DEFAULT_PATH,
+    threshold: float = DEFAULT_THRESHOLD,
+) -> None:
+    """Append to the history and raise if any wall-clock metric
+    regressed >``threshold`` vs the previous same-backend baseline. The
+    fresh measurements are persisted even when the gate fires (marked
+    ``regressed`` so they never become a baseline themselves), so a
+    regression leaves the data needed to debug it WITHOUT the next
+    re-run silently passing against the slowed-down numbers."""
+    prev = _load_last(path, bench, jax.default_backend())
+    failures = check_regression(prev, metrics, threshold=threshold)
+    record(bench, metrics, path=path, regressed=bool(failures))
+    if failures:
+        raise AssertionError(
+            f"{bench}: wall-clock regression vs previous history entry — "
+            + "; ".join(failures)
+        )

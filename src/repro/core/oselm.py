@@ -86,12 +86,28 @@ def oselm_step(state: OSELMState, x: jnp.ndarray, t: jnp.ndarray) -> OSELMState:
     return state.replace(beta=beta_new, p=p_new)
 
 
-def oselm_step_k1(state: OSELMState, x: jnp.ndarray, t: jnp.ndarray) -> OSELMState:
+def oselm_step_k1(
+    state: OSELMState,
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    *,
+    kernel: bool = False,
+    interpret: bool = True,
+) -> OSELMState:
     """k=1 fast path (paper's deployed configuration).
 
     The (I + hPhᵀ) inverse is a scalar reciprocal — no SVD/QRD. ``x`` and
-    ``t`` are single samples shaped (n,) and (m,).
+    ``t`` are single samples shaped (n,) and (m,). ``kernel=True`` runs
+    the step through the fused Pallas kernels
+    (``repro.kernels.ops.oselm_step_k1_kernel``: hidden_proj +
+    matmul_atb + rank1_add; interpret=True on CPU) — same dispatch
+    convention as ``fleet_train(kernel=True)``.
     """
+    if kernel:
+        # lazy import: repro.kernels.ops itself imports this module
+        from repro.kernels.ops import oselm_step_k1_kernel
+
+        return oselm_step_k1_kernel(state, x, t, interpret=interpret)
     h = hidden(state.params, x[None, :], state.activation)[0]  # (Ñ,)
     p = state.p / state.forget
     ph = p @ h                                   # (Ñ,)
@@ -123,6 +139,28 @@ def _scan_train(state: OSELMState, xs: jnp.ndarray, ts: jnp.ndarray) -> OSELMSta
     return out
 
 
-def oselm_train_sequential(state: OSELMState, xs: jnp.ndarray, ts: jnp.ndarray) -> OSELMState:
-    """Stream samples one at a time (k=1), jitted scan over the stream."""
+def oselm_train_sequential(
+    state: OSELMState,
+    xs: jnp.ndarray,
+    ts: jnp.ndarray,
+    *,
+    kernel: bool = False,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> OSELMState:
+    """Stream samples one at a time (k=1), jitted scan over the stream.
+
+    ``kernel=True`` fuses the whole stream into one ingest-kernel call
+    (``repro.kernels.fleet_ingest`` with a singleton device axis): the
+    hidden projections batch into one matmul and (P, β) stay resident
+    across the stream instead of round-tripping HBM per sample."""
+    if kernel:
+        from repro.kernels.fleet_ingest import fleet_ingest
+
+        stacked = jax.tree.map(lambda leaf: leaf[None], state)
+        out, _ = fleet_ingest(
+            stacked, jnp.asarray(xs)[None], jnp.asarray(ts)[None],
+            backend=backend, interpret=interpret,
+        )
+        return jax.tree.map(lambda leaf: leaf[0], out)
     return _scan_train(state, xs, ts)

@@ -26,8 +26,22 @@ except ImportError:  # pragma: no cover - older jax
 HAS_VARYING_TYPES = hasattr(jax, "typeof") and hasattr(jax.lax, "pvary")
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs):
-    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+def shard_map_compat(f, mesh, in_specs, out_specs, check_rep=True):
+    """``check_rep=False`` is needed for bodies containing ops with no
+    replication rule (e.g. ``pallas_call``); jax >= 0.6 renamed the
+    kwarg to ``check_vma``, so the flag is translated per version."""
+    kw = {}
+    if not check_rep:
+        import inspect
+
+        params = inspect.signature(_shard_map_impl).parameters
+        if "check_vma" in params:  # jax >= 0.6
+            kw["check_vma"] = False
+        elif "check_rep" in params:
+            kw["check_rep"] = False
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )
 
 
 def revary(x: jnp.ndarray, axes: Sequence[str]) -> jnp.ndarray:

@@ -36,7 +36,7 @@ from repro.fleet.fleet import (
     fleet_train_rounds,
     init_fleet,
 )
-from repro.fleet.sharded import fleet_merge_sharded
+from repro.fleet.sharded import fleet_merge_sharded, fleet_train_sharded
 from repro.fleet.partition import (
     DriftEvent,
     FleetStreams,
@@ -60,7 +60,7 @@ __all__ = [
     "device_state", "fleet_from_uv", "fleet_merge", "fleet_merge_kernel",
     "fleet_merge_masked", "fleet_merge_masked_kernel", "fleet_merge_sharded",
     "fleet_to_uv", "fleet_score", "fleet_train", "fleet_train_rounds",
-    "init_fleet",
+    "fleet_train_sharded", "init_fleet",
     "DriftEvent", "FleetStreams", "make_fleet_streams", "random_drift_schedule",
     "StalenessSchedule", "fleet_train_async",
     "TOPOLOGIES", "Topology", "all_to_all", "hierarchical", "make_topology",

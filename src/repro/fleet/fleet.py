@@ -100,11 +100,56 @@ def _fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
     return jax.vmap(train_one)(states, streams)
 
 
-@jax.jit
-def fleet_train(states: OSELMState, streams: jnp.ndarray) -> OSELMState:
+def _warn_ingest_padding(steps: int, backend: str, caller: str) -> None:
+    """Log (at trace time — once per compiled shape) when the fused
+    ingest lowering pads the sample window. Padded slots are masked to
+    exact identity steps (they never update P/β), so results are
+    unchanged; the warning only surfaces the wasted slots."""
+    from repro.kernels.fleet_ingest import ingest_padding, resolve_backend
+
+    backend = resolve_backend(backend)
+    pallas_pad, xla_pad = ingest_padding(steps)
+    pad = xla_pad if backend == "xla" else pallas_pad
+    if pad:
+        log.warning(
+            "%s: kernel ingest pads the %d-sample window with %d masked "
+            "identity slots (tile/block alignment) — results are exact, "
+            "but %d slots per device per window are wasted work",
+            caller, steps, pad, pad,
+        )
+
+
+@partial(jax.jit, static_argnames=("kernel", "backend", "interpret"))
+def fleet_train(
+    states: OSELMState,
+    streams: jnp.ndarray,
+    *,
+    kernel: bool = False,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> OSELMState:
     """Every device sequentially trains (k=1 autoencoder steps) on its
-    own stream. ``streams``: (D, T, n_features)."""
-    return _fleet_train(states, jnp.asarray(streams))
+    own stream. ``streams``: (D, T, n_features).
+
+    ``kernel=True`` routes the whole window through the fused ingest
+    family (``repro.kernels.fleet_ingest``) — the Pallas VMEM-resident
+    kernel on TPU, its fused-XLA lowering elsewhere (``backend=`` to
+    force one) — mirroring ``fleet_merge_kernel``'s dispatch. The
+    kernel path requires the fleet-shared SLFN basis ``init_fleet``
+    provides; this function is itself jitted, so the shared-basis
+    precondition is validated at the concrete entry points
+    (``fleet_ingest`` called directly, ``fleet_train_rounds``,
+    ``fleet_train_sharded``, ``FleetRuntime``) rather than here."""
+    streams = jnp.asarray(streams)
+    if kernel:
+        from repro.kernels.fleet_ingest import fleet_ingest
+
+        _warn_ingest_padding(streams.shape[1], backend, "fleet_train")
+        states, _ = fleet_ingest(
+            states, streams, backend=backend, interpret=interpret
+        )
+        return states
+    return _fleet_train(states, streams)
 
 
 def fleet_to_uv(states: OSELMState, *, ridge: float = 0.0) -> UV:
@@ -356,27 +401,40 @@ def fleet_score(states: OSELMState, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def _rounds_body(
-    states: OSELMState, chunks: jnp.ndarray, topology: Topology, ridge: float
+    states: OSELMState,
+    chunks: jnp.ndarray,
+    topology: Topology,
+    ridge: float,
+    kernel: bool,
+    backend: str,
+    interpret: bool | None,
 ) -> OSELMState:
     """Compile-once train→merge loop: one ``lax.scan`` over the round
     axis (chunks: (rounds, D, per, feat)) instead of a Python loop
-    re-dispatching two jits per round."""
+    re-dispatching two jits per round. ``kernel=True`` ingests each
+    round's chunk through the fused ``fleet_ingest`` family."""
 
     def body(st, chunk):
-        st = _fleet_train(st, chunk)
+        if kernel:
+            from repro.kernels.fleet_ingest import fleet_ingest
+
+            st, _ = fleet_ingest(st, chunk, backend=backend, interpret=interpret)
+        else:
+            st = _fleet_train(st, chunk)
         return _merge_body(st, topology, ridge), None
 
     out, _ = jax.lax.scan(body, states, chunks)
     return out
 
 
+_ROUNDS_STATIC = ("topology", "ridge", "kernel", "backend", "interpret")
 _ROUNDS_SCAN = {
     # donate=True lets XLA reuse the input fleet buffers for the scan
     # carry (the CPU backend ignores donation, with a warning)
     True: partial(
-        jax.jit, static_argnames=("topology", "ridge"), donate_argnums=(0,)
+        jax.jit, static_argnames=_ROUNDS_STATIC, donate_argnums=(0,)
     )(_rounds_body),
-    False: partial(jax.jit, static_argnames=("topology", "ridge"))(_rounds_body),
+    False: partial(jax.jit, static_argnames=_ROUNDS_STATIC)(_rounds_body),
 }
 
 
@@ -388,6 +446,9 @@ def fleet_train_rounds(
     rounds: int,
     ridge: float = 0.0,
     donate: bool = False,
+    kernel: bool = False,
+    backend: str = "auto",
+    interpret: bool | None = None,
 ) -> OSELMState:
     """The paper's "repeatedly applied to synchronize" mode at fleet
     scale: chunk each stream into ``rounds`` pieces, train a chunk,
@@ -403,7 +464,11 @@ def fleet_train_rounds(
     .. note:: When ``steps % rounds != 0`` the tail ``steps % rounds``
        samples of every stream are **dropped** (each round trains on
        exactly ``steps // rounds`` samples); a warning is logged when
-       that truncation is nonzero.
+       that truncation is nonzero. With ``kernel=True`` a second
+       warning fires when the fused lowering pads each round's
+       ``steps // rounds``-sample window up to its tile/block size —
+       padded slots are masked identity steps (they never update P/β),
+       so that padding is wasted work, never a result change.
     """
     streams = jnp.asarray(streams)
     n_dev, steps, feat = streams.shape
@@ -417,12 +482,19 @@ def fleet_train_rounds(
             "dropping the tail %d samples of every device stream",
             steps, rounds, tail,
         )
+    if kernel:
+        from repro.kernels.fleet_ingest import validate_shared_basis
+
+        validate_shared_basis(states)  # concrete here, pre-jit
+        _warn_ingest_padding(per, backend, "fleet_train_rounds")
     chunks = (
         streams[:, : rounds * per]
         .reshape(n_dev, rounds, per, feat)
         .transpose(1, 0, 2, 3)
     )
-    return _ROUNDS_SCAN[donate](states, chunks, topology, ridge)
+    return _ROUNDS_SCAN[donate](
+        states, chunks, topology, ridge, kernel, backend, interpret
+    )
 
 
 def device_state(states: OSELMState, idx: int) -> OSELMState:

@@ -5,6 +5,12 @@ Layout per kernel: ``<name>.py`` holds the pallas_call + BlockSpec,
 tests assert against (interpret=True on CPU; Mosaic on TPU).
 """
 from repro.kernels.flash_attn import flash_attention
+from repro.kernels.fleet_ingest import (
+    fleet_ingest,
+    fleet_ingest_kernel,
+    fleet_ingest_xla,
+    ingest_padding,
+)
 from repro.kernels.gla_scan import gla_forward
 from repro.kernels.ops import (
     hidden_proj,
@@ -26,6 +32,10 @@ from repro.kernels.topology_merge import (
 
 __all__ = [
     "flash_attention",
+    "fleet_ingest",
+    "fleet_ingest_kernel",
+    "fleet_ingest_xla",
+    "ingest_padding",
     "gla_forward",
     "hidden_proj",
     "matmul_atb",

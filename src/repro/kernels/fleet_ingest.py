@@ -1,0 +1,429 @@
+"""Fused fleet-ingest kernel family — the per-tick training hot path.
+
+One serve tick ingests a window of samples on every device: score the
+incoming window under the CURRENT model (the pre-train ``ae_score``
+drift signal, §3.4 / arXiv:2203.01077), then run the paper's k=1
+sequential OS-ELM updates (Eqs. 9–13, scalar-reciprocal fast path,
+forgetting factor λ) over the window. The reference implementation —
+a score pass plus ``vmap``-of-``lax.scan`` over single-sample RLS
+steps — round-trips each device's P (Ñ×Ñ) and β (Ñ×m) through HBM
+once **per sample** and walks the window twice.
+
+This module fuses the whole tick into one pass with two lowerings:
+
+- ``fleet_ingest_kernel`` — ONE ``pallas_call`` whose grid tiles the
+  device axis in blocks of ``block_d`` devices. Each program keeps its
+  devices' (P, β) resident in VMEM for the entire window: the hidden
+  projections H = G(xα+b) for the whole window are one MXU matmul, the
+  pre-train reconstruction errors (the drift signal) fall out of the
+  same H against the tick-start β, and an in-kernel ``fori_loop`` then
+  applies the k=1 rank-1 RLS updates sample by sample. Per-device
+  state touches HBM once per tick instead of once per sample. Sample
+  slots padded up to the sublane tile are masked to exact identity
+  (they never update P/β and contribute nothing to the score).
+  ``interpret=True`` on CPU, Mosaic on TPU — same convention as
+  ``kernels/topology_merge.py``.
+
+- ``fleet_ingest_xla`` — the same one-pass dataflow lowered through
+  XLA for backends without Pallas execution (this container's CPU):
+  batched H + pre-train errors, then the window's k=1 chain applied
+  one *block* of ``block_t`` samples at a time in its exact batched
+  Woodbury form.  c sequential rank-1 RLS steps are algebraically one
+  rank-c update — with forgetting they solve
+  min_β Σ_t λ^{c-t} ‖h_tβ − t_t‖² + λ^c ‖β − β₀‖²_{K₀} — so
+
+      P' = P/λ^c − (P/λ^c) H̃ᵀ (I + H̃ (P/λ^c) H̃ᵀ)⁻¹ H̃ (P/λ^c)
+      β' = β + P' Hᵀ W E₀,      H̃ = W^{1/2} H,  W = diag(λ^{c-t})
+
+  where E₀ = T − Hβ is exactly the pre-train error the drift score
+  already computed (the update re-uses it; the window is never walked
+  twice). Equality with the sequential chain is exact in real
+  arithmetic; in f32 the c×c Cholesky reorders the accumulation, so
+  the bit-level drift vs the sequential oracle is a little wider than
+  the Pallas kernel's (tests bound both). Padded sample slots carry
+  weight 0, which is an exact identity step.
+
+Both lowerings accept an optional supervised ``targets`` window; the
+default (``None``) is the paper's autoencoder tick (targets = inputs,
+the x block is not duplicated). ``fleet_ingest`` dispatches between
+the two (``backend="auto"`` picks Pallas on TPU, the fused XLA form
+elsewhere) and is what ``fleet_train(kernel=True)``,
+``oselm_train_sequential(kernel=True)`` and the runtime's kernel
+ingest ride on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.activations import get_activation
+from repro.core.oselm import OSELMState
+
+__all__ = [
+    "fleet_ingest",
+    "fleet_ingest_kernel",
+    "fleet_ingest_xla",
+    "ingest_padding",
+    "resolve_backend",
+    "validate_shared_basis",
+]
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def resolve_backend(backend: str) -> str:
+    """The ONE place the ``"auto"`` ingest dispatch is decided: Pallas
+    only where it compiles natively (TPU), the fused XLA form elsewhere.
+    Shared by the dispatcher, the padding warning and the sharded
+    ingest's check_rep decision so they can never disagree."""
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown ingest backend {backend!r}")
+    return backend
+
+
+def ingest_padding(n_samples: int, block_t: int = 32) -> tuple[int, int]:
+    """(pallas_pad, xla_pad): sample slots each lowering pads the window
+    with. Padded slots are masked to exact identity steps; callers warn
+    when nonzero (see ``fleet_train_rounds``)."""
+    bt = min(block_t, n_samples)
+    return (
+        _pad_up(n_samples, _SUBLANE) - n_samples,
+        _pad_up(n_samples, bt) - n_samples,
+    )
+
+
+def validate_shared_basis(states: OSELMState) -> None:
+    """Raise if a stacked fleet does NOT carry the fleet-shared SLFN
+    basis the fused ingest assumes (``init_fleet`` broadcasts ONE
+    (α, b); Eq. 8 merging requires it — see PR 1 note). A fleet stacked
+    from per-device random bases would otherwise be silently projected
+    through device 0's basis. Spot-checks first vs last device; a no-op
+    under tracing (the jitted lowerings can't inspect values), so the
+    non-jitted entry points — the ``fleet_ingest`` dispatcher, the
+    rounds/sharded wrappers and ``FleetRuntime.__init__`` — call it
+    where the arrays are still concrete."""
+    alpha = states.params.alpha
+    if alpha.ndim != 3 or isinstance(alpha, jax.core.Tracer):
+        return
+    import numpy as np
+
+    if not np.array_equal(np.asarray(alpha[0]), np.asarray(alpha[-1])):
+        raise ValueError(
+            "fused ingest requires the fleet-shared SLFN basis "
+            "(init_fleet broadcasts one (α, b)); this stack carries "
+            "per-device bases, which the kernel cannot honor"
+        )
+
+
+def _shared_basis(states: OSELMState) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The fleet's (α, b): device 0's copy of the shared basis (see
+    ``validate_shared_basis``; inside the jitted lowerings the leaves
+    are tracers, so the invariant is checked at the concrete entry
+    points, not here). Single-device states pass through unchanged."""
+    alpha, bias = states.params.alpha, states.params.bias
+    if alpha.ndim == 3:  # stacked fleet: (D, n, Ñ) identical copies
+        alpha, bias = alpha[0], bias[0]
+    return alpha, bias
+
+
+# ------------------------------------------------------------- pallas kernel
+
+
+def _ingest_kernel(*refs, tied: bool,
+                   t_real: int, t_pad: int, m_real: int, nh_real: int,
+                   nh_rows: int, activation: str, forget: float):
+    """One grid step = ``block_d`` devices' whole tick, VMEM-resident.
+
+    Layouts (B = block_d, TP/NL/ML/NHL lane- or sublane-padded, NHR
+    sublane-padded): x (B, TP, NL), targets (B, TP, ML) — the x block
+    itself when ``tied`` — α (NL, NHL), bias (1, 1, NHL),
+    P (B, NHR, NHL), β (B, NHR, ML). P/β rows ≥ Ñ and lanes ≥ Ñ
+    (resp. m) are zero and stay zero through every update below.
+    """
+    if tied:
+        x_ref, a_ref, b_ref, p_ref, be_ref, po_ref, bo_ref, l_ref = refs
+    else:
+        x_ref, tt_ref, a_ref, b_ref, p_ref, be_ref, po_ref, bo_ref, l_ref = refs
+    xb = x_ref[...].astype(jnp.float32)                       # (B, TP, NL)
+    tb = xb if tied else tt_ref[...].astype(jnp.float32)      # (B, TP, ML)
+    g = get_activation(activation)
+    # hidden projection for the WHOLE window: one MXU matmul + epilogue.
+    # Lanes ≥ Ñ are masked off — G(0·α + 0) need not be 0 (sigmoid!).
+    h_all = g(
+        jax.lax.dot_general(
+            xb, a_ref[...], (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b_ref[...]
+    )
+    nh_mask = jax.lax.broadcasted_iota(jnp.int32, (1, 1, h_all.shape[2]), 2) < nh_real
+    h_all = jnp.where(nh_mask, h_all, 0.0)                    # (B, TP, NHL)
+
+    p = p_ref[...].astype(jnp.float32)                        # (B, NHR, NHL)
+    be = be_ref[...].astype(jnp.float32)                      # (B, NHR, ML)
+
+    # pre-train drift signal: prediction error of the incoming window
+    # under the tick-start β — batched, re-using h_all.
+    e0 = tb - jax.lax.dot_general(
+        h_all[:, :, :nh_rows], be, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+    t_mask = jax.lax.broadcasted_iota(jnp.int32, (1, t_pad, 1), 1) < t_real
+    loss = jnp.sum(jnp.where(t_mask, e0 * e0, 0.0), axis=(1, 2)) / (t_real * m_real)
+
+    def body(t, carry):
+        p, be = carry
+        h = jax.lax.dynamic_slice_in_dim(h_all, t, 1, axis=1)[:, 0, :]  # (B, NHL)
+        tt = jax.lax.dynamic_slice_in_dim(tb, t, 1, axis=1)[:, 0, :]    # (B, ML)
+        h_rows = h[:, :nh_rows]                                         # (B, NHR)
+        pf = p / forget
+        ph = jax.lax.dot_general(                                       # P h (rows)
+            pf, h, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                                               # (B, NHR)
+        denom = 1.0 + jnp.sum(h_rows * ph, axis=1, keepdims=True)       # (B, 1)
+        ph_lane = jnp.pad(ph, ((0, 0), (0, h.shape[1] - nh_rows)))      # (B, NHL)
+        p_new = pf - ph[:, :, None] * ph_lane[:, None, :] / denom[:, :, None]
+        err = tt - jax.lax.dot_general(                                 # (B, ML)
+            h_rows, be, (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )
+        # gain = P_new h, computed as the reference does (≡ ph/denom in
+        # exact arithmetic; the matvec keeps bit-level drift vs the
+        # sequential oracle inside the 1e-5 parity bound)
+        gain = jax.lax.dot_general(
+            p_new, h, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )                                                               # (B, NHR)
+        be_new = be + gain[:, :, None] * err[:, None, :]
+        # padded sample slots are exact identity: no update, no λ decay
+        valid = t < t_real
+        return (
+            jnp.where(valid, p_new, p),
+            jnp.where(valid, be_new, be),
+        )
+
+    p, be = jax.lax.fori_loop(0, t_pad, body, (p, be))
+    po_ref[...] = p.astype(po_ref.dtype)
+    bo_ref[...] = be.astype(bo_ref.dtype)
+    l_ref[...] = jnp.broadcast_to(loss[:, None], l_ref.shape).astype(l_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def fleet_ingest_kernel(
+    states: OSELMState,
+    window: jnp.ndarray,
+    targets: jnp.ndarray | None = None,
+    *,
+    block_d: int = 8,
+    interpret: bool = True,
+) -> tuple[OSELMState, jnp.ndarray]:
+    """Fused Pallas tick ingest over a stacked fleet.
+
+    ``window`` is (D, T, n), ``targets`` (D, T, m) or None for the
+    autoencoder tick (targets = window); returns (trained fleet, (D,)
+    mean pre-train prediction loss of each device's window — the drift
+    signal). Each grid program holds ``block_d`` devices' (P, β) in
+    VMEM across the whole window: HBM sees the state once per tick,
+    not once per sample.
+    """
+    window = jnp.asarray(window)
+    d, t, n = window.shape
+    nh, m = states.beta.shape[1], states.beta.shape[2]
+    tied = targets is None
+    if tied:
+        assert m == n, "autoencoder ingest needs m == n"
+    else:
+        targets = jnp.asarray(targets)
+        assert targets.shape == (d, t, m), (targets.shape, (d, t, m))
+
+    bd = min(block_d, d)
+    dp = _pad_up(d, bd)
+    tp = _pad_up(t, _SUBLANE)
+    nl = _pad_up(n, _LANE)
+    ml = _pad_up(m, _LANE)
+    nhl = _pad_up(nh, _LANE)
+    nhr = _pad_up(nh, _SUBLANE)
+
+    alpha, bias = _shared_basis(states)
+    xw = jnp.pad(window, ((0, dp - d), (0, tp - t), (0, nl - n)))
+    ap = jnp.pad(alpha, ((0, nl - n), (0, nhl - nh)))
+    bp = jnp.pad(bias, (0, nhl - nh))[None, None, :]
+    pp = jnp.pad(states.p, ((0, dp - d), (0, nhr - nh), (0, nhl - nh)))
+    bep = jnp.pad(states.beta, ((0, dp - d), (0, nhr - nh), (0, ml - m)))
+
+    operands = [xw]
+    in_specs = [pl.BlockSpec((bd, tp, nl), lambda i: (i, 0, 0))]
+    if not tied:
+        operands.append(jnp.pad(targets, ((0, dp - d), (0, tp - t), (0, ml - m))))
+        in_specs.append(pl.BlockSpec((bd, tp, ml), lambda i: (i, 0, 0)))
+    operands += [ap, bp, pp, bep]
+    in_specs += [
+        pl.BlockSpec((nl, nhl), lambda i: (0, 0)),
+        pl.BlockSpec((1, 1, nhl), lambda i: (0, 0, 0)),
+        pl.BlockSpec((bd, nhr, nhl), lambda i: (i, 0, 0)),
+        pl.BlockSpec((bd, nhr, ml), lambda i: (i, 0, 0)),
+    ]
+
+    kern = functools.partial(
+        _ingest_kernel, tied=tied,
+        t_real=t, t_pad=tp, m_real=m, nh_real=nh, nh_rows=nhr,
+        activation=states.activation, forget=states.forget,
+    )
+    p_out, b_out, l_out = pl.pallas_call(
+        kern,
+        grid=(dp // bd,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bd, nhr, nhl), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bd, nhr, ml), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bd, _LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp, nhr, nhl), jnp.float32),
+            jax.ShapeDtypeStruct((dp, nhr, ml), jnp.float32),
+            jax.ShapeDtypeStruct((dp, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    new_states = states.replace(
+        p=p_out[:d, :nh, :nh].astype(states.p.dtype),
+        beta=b_out[:d, :nh, :m].astype(states.beta.dtype),
+    )
+    return new_states, l_out[:d, 0]
+
+
+# --------------------------------------------------------- fused XLA lowering
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def fleet_ingest_xla(
+    states: OSELMState,
+    window: jnp.ndarray,
+    targets: jnp.ndarray | None = None,
+    *,
+    block_t: int = 32,
+) -> tuple[OSELMState, jnp.ndarray]:
+    """``fleet_ingest_kernel``'s dataflow lowered through plain XLA —
+    the hot path on backends where Pallas only interprets (CPU).
+
+    One pass over the window: batched hidden projections, the pre-train
+    drift score, and the k=1 chain applied ``block_t`` samples at a time
+    in its exact batched Woodbury form (module docstring).
+    """
+    window = jnp.asarray(window)
+    d, t, n = window.shape
+    nh, m = states.beta.shape[1], states.beta.shape[2]
+    if targets is None:
+        assert m == n, "autoencoder ingest needs m == n"
+        targets = window
+    else:
+        targets = jnp.asarray(targets)
+        assert targets.shape == (d, t, m), (targets.shape, (d, t, m))
+    alpha, bias = _shared_basis(states)
+    g = get_activation(states.activation)
+    h_all = g(jnp.einsum("dtn,nh->dth", window, alpha) + bias)  # (D, T, Ñ)
+
+    # pre-train drift signal under the tick-start β
+    e0_all = targets - jnp.einsum("dth,dhm->dtm", h_all, states.beta)
+    losses = jnp.mean(e0_all * e0_all, axis=(1, 2))
+
+    bt = min(block_t, t)
+    n_blocks = -(-t // bt)
+    tp = n_blocks * bt
+    if tp != t:  # ragged tail block: zero-weight (exact identity) slots
+        h_all = jnp.pad(h_all, ((0, 0), (0, tp - t), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, tp - t), (0, 0)))
+    h_blk = h_all.reshape(d, n_blocks, bt, nh).transpose(1, 0, 2, 3)
+    t_blk = targets.reshape(d, n_blocks, bt, m).transpose(1, 0, 2, 3)
+    forget = states.forget
+
+    def block_update(p, beta, hb, e0, c):
+        """One block's exact rank-c Woodbury update; ``e0`` are the
+        PRE-BLOCK errors (targets − hβ under the block-entry β)."""
+        # weights λ^{c-1-t} for live slots, 0 for padded ones
+        idx = jnp.arange(bt)
+        w = jnp.where(idx < c, forget ** (c - 1 - idx).astype(p.dtype), 0.0)
+        lam_c = jnp.asarray(forget, p.dtype) ** c
+        sw = jnp.sqrt(w)
+        hw = hb * sw[None, :, None]                     # W^1/2 H
+        pl_ = p / lam_c
+        php = jnp.einsum("dtn,dnm->dtm", hw, pl_)       # H̃ P/λ^c
+        s = jnp.einsum("dtn,dun->dtu", php, hw)
+        s = s + jnp.eye(bt, dtype=s.dtype)
+        cho = jax.scipy.linalg.cho_factor(s)
+        gain = jax.scipy.linalg.cho_solve(cho, php)     # S⁻¹ H̃ P/λ^c
+        p_new = pl_ - jnp.einsum("dtn,dtm->dnm", php, gain)
+        # β' = β + P' Hᵀ W E₀
+        hwe = jnp.einsum("dtn,dtm->dnm", hw, e0 * sw[None, :, None])
+        beta_new = beta + jnp.einsum("dnm,dmk->dnk", p_new, hwe)
+        return p_new, beta_new
+
+    # block 0's pre-block β IS the tick-start β, so its errors are the
+    # drift-score errors already computed — re-used, not recomputed
+    # (block 0 is always fully live: tail padding only reaches the last
+    # block, and a padded window implies n_blocks >= 2)
+    p, beta = block_update(
+        states.p, states.beta, h_blk[0], e0_all[:, :bt], jnp.int32(bt)
+    )
+    if n_blocks > 1:
+        c_real = jnp.minimum(
+            jnp.full(n_blocks - 1, bt, jnp.int32),
+            t - bt * jnp.arange(1, n_blocks, dtype=jnp.int32),
+        )
+
+        def body(carry, blk):
+            p, beta = carry
+            hb, tb, c = blk
+            e0 = tb - jnp.einsum("dtn,dnm->dtm", hb, beta)  # pre-BLOCK errors
+            return block_update(p, beta, hb, e0, c), None
+
+        (p, beta), _ = jax.lax.scan(
+            body, (p, beta), (h_blk[1:], t_blk[1:], c_real)
+        )
+    return states.replace(p=p, beta=beta), losses
+
+
+# ------------------------------------------------------------------ dispatch
+
+
+def fleet_ingest(
+    states: OSELMState,
+    window: jnp.ndarray,
+    targets: jnp.ndarray | None = None,
+    *,
+    backend: str = "auto",
+    block_d: int = 8,
+    block_t: int = 32,
+    interpret: bool | None = None,
+) -> tuple[OSELMState, jnp.ndarray]:
+    """Fused tick ingest: (trained fleet, per-device pre-train score).
+
+    ``backend="pallas"`` runs the VMEM-resident kernel, ``"xla"`` the
+    fused Woodbury lowering, ``"auto"`` picks Pallas only where it
+    compiles natively (TPU) and the XLA form elsewhere — both are the
+    same dataflow and match the sequential reference (tests bound
+    both). ``interpret=None`` resolves per backend: Mosaic
+    (interpret=False) on TPU, the Pallas interpreter on CPU — so the
+    runtime's kernel ingest lowers natively on the hardware it was
+    built for without a config knob.
+    """
+    validate_shared_basis(states)  # no-op when already under a trace
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return fleet_ingest_kernel(
+            states, window, targets, block_d=block_d, interpret=interpret,
+        )
+    return fleet_ingest_xla(states, window, targets, block_t=block_t)

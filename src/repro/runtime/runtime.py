@@ -52,6 +52,7 @@ from repro.fleet.fleet import (
 )
 from repro.fleet.staleness import StalenessSchedule, _lagged_gather
 from repro.fleet.topology import Topology
+from repro.kernels.fleet_ingest import fleet_ingest
 from repro.runtime.detector import DetectorConfig, detector_update, init_detector
 from repro.runtime.feed import TickFeed
 from repro.runtime.governor import GovernorConfig, MergeDecision, MergeGovernor
@@ -68,6 +69,8 @@ class RuntimeConfig:
     gate_merges: bool = True          # False: no-quarantine baseline (everyone merges)
     staleness: StalenessSchedule | None = None
     use_merge_kernel: bool = False    # route merges through the Pallas family
+    use_ingest_kernel: bool = False   # fused tick ingest (repro.kernels.fleet_ingest)
+    ingest_backend: str = "auto"      # "pallas" | "xla" | "auto" (TPU→pallas)
     snapshot_every: int | None = None
     snapshot_dir: str | Path | None = None
     snapshot_keep: int = 3
@@ -124,15 +127,36 @@ class FleetRuntime:
         det_cfg = config.detector
         topology, ridge = config.topology, config.ridge
 
-        def ingest_detect(fleet, det, batch, rebase, participants):
-            # score BEFORE training: the loss of the incoming data under
-            # the current model is the drift signal (§3.4 / 2203.01077)
-            losses = jax.vmap(lambda s, xb: jnp.mean(ae_score(s, xb)))(fleet, batch)
-            fleet = _fleet_train(fleet, batch)  # k=1 sequential updates
-            det, drifted, fresh = detector_update(
-                det, losses, det_cfg, rebase=rebase, participants=participants
-            )
-            return fleet, det, losses, drifted, fresh
+        if config.use_ingest_kernel:
+            from repro.kernels.fleet_ingest import validate_shared_basis
+
+            # the tick is jitted (tracers inside), so the kernel-ingest
+            # shared-basis precondition is checked once, here, while the
+            # fleet is concrete
+            validate_shared_basis(states)
+
+            def ingest_detect(fleet, det, batch, rebase, participants):
+                # the fused ingest family computes the pre-train drift
+                # signal and the k=1 window updates in ONE pass over the
+                # batch ((P, β) resident across the window) — same
+                # losses the two-pass reference produces
+                fleet, losses = fleet_ingest(
+                    fleet, batch, backend=config.ingest_backend
+                )
+                det, drifted, fresh = detector_update(
+                    det, losses, det_cfg, rebase=rebase, participants=participants
+                )
+                return fleet, det, losses, drifted, fresh
+        else:
+            def ingest_detect(fleet, det, batch, rebase, participants):
+                # score BEFORE training: the loss of the incoming data under
+                # the current model is the drift signal (§3.4 / 2203.01077)
+                losses = jax.vmap(lambda s, xb: jnp.mean(ae_score(s, xb)))(fleet, batch)
+                fleet = _fleet_train(fleet, batch)  # k=1 sequential updates
+                det, drifted, fresh = detector_update(
+                    det, losses, det_cfg, rebase=rebase, participants=participants
+                )
+                return fleet, det, losses, drifted, fresh
 
         self._ingest_detect = jax.jit(ingest_detect)
         # first tick after a merge: participants' bands rebase common-mode

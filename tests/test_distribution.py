@@ -229,3 +229,63 @@ def test_sharded_fleet_merge_subprocess():
     )
     assert out.returncode == 0, out.stderr[-2000:]
     assert "RESULT" in out.stdout
+
+
+_SHARDED_TRAIN_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.fleet import (init_fleet, fleet_train, fleet_train_sharded,
+                         fleet_merge, fleet_merge_sharded, ring)
+from repro.launch.sharding import shard_fleet
+
+mesh = jax.make_mesh((8,), ("data",))
+D, H, F, T = 32, 8, 24, 16
+key = jax.random.PRNGKey(0)
+x_init = jax.random.uniform(key, (D, 2 * H, F))
+fleet = init_fleet(key, D, F, H, x_init, activation="identity", ridge=1e-3)
+streams = jax.random.uniform(jax.random.PRNGKey(1), (D, T, F))
+ref = fleet_train(fleet, streams)
+
+fleet_s = shard_fleet(fleet, mesh)
+worst = 0.0
+# per-shard ingest (no collectives), scan and fused-kernel paths
+for kw in (dict(), dict(kernel=True, backend="xla"),
+           dict(kernel=True, backend="pallas", interpret=True)):
+    got = fleet_train_sharded(fleet_s, streams, mesh, ("data",), **kw)
+    worst = max(worst, float(jnp.max(jnp.abs(
+        np.asarray(got.beta) - np.asarray(ref.beta)))))
+
+# open-ring halo-exchange merge across the 8 real shards (hops < D/8
+# stays within adjacent shards; hops == D/8 == 4 is the edge case)
+trained_s = fleet_train_sharded(fleet_s, streams, mesh, ("data",))
+for hops in (1, 2, 4):
+    mref = fleet_merge(ref, ring(D, hops=hops), ridge=1e-3)
+    mgot = fleet_merge_sharded(trained_s, ring(D, hops=hops), mesh, ("data",),
+                               ridge=1e-3)
+    worst = max(worst, float(jnp.max(jnp.abs(
+        np.asarray(mgot.beta) - np.asarray(mref.beta)))))
+try:  # a band wider than a shard straddles non-adjacent shards
+    fleet_merge_sharded(trained_s, ring(D, hops=5), mesh, ("data",))
+    raise SystemExit("expected halo hops validation to fire")
+except ValueError as e:
+    assert "halo" in str(e), e
+print("RESULT", worst)
+assert worst < 1e-4
+"""
+
+
+@pytest.mark.slow
+def test_sharded_fleet_train_subprocess():
+    """shard_map'd tick ingest (scan AND fused-kernel paths) across 8
+    real host shards equals the single-process fleet_train, and the
+    open-ring halo-exchange merge equals fleet_merge — sharded training
+    and banded merges compose end-to-end."""
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_TRAIN_SCRIPT], env=env,
+        cwd=os.path.dirname(os.path.dirname(__file__)),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "RESULT" in out.stdout

@@ -225,18 +225,29 @@ def test_fleet_train_rounds_scan_matches_python_loop(small_fleet):
 
 def test_fleet_merge_sharded_single_shard(small_fleet):
     """psum-of-segment-sums merge on a 1-shard mesh equals fleet_merge
-    for every cluster-wise-constant topology; the open ring is
+    for every cluster-wise-constant topology; the open ring now takes
+    the ppermute halo-exchange path (its 1-shard degenerate form is the
+    circular wrap); arbitrary sparse dense-mask topologies stay
     rejected."""
+    from repro.fleet.topology import Topology
+
     fleet, d = small_fleet
     mesh = jax.make_mesh((1,), ("data",))
     assert fleet_stack_spec(("data",)) == jax.sharding.PartitionSpec(("data",))
     fleet_s = shard_fleet(fleet, mesh)
     for topo in (all_to_all(d), star(d), hierarchical(d, 3),
-                 hierarchical(d, 3, head_exchange=False), ring(d, hops=d // 2)):
+                 hierarchical(d, 3, head_exchange=False), ring(d, hops=d // 2),
+                 ring(d, hops=1), ring(d, hops=2)):
         ref = fleet_merge(fleet, topo, ridge=RIDGE)
         got = fleet_merge_sharded(fleet_s, topo, mesh, ("data",), ridge=RIDGE)
         np.testing.assert_allclose(
             np.asarray(got.beta), np.asarray(ref.beta), rtol=1e-4, atol=1e-5
         )
+        np.testing.assert_allclose(
+            np.asarray(got.p), np.asarray(ref.p), rtol=1e-4, atol=1e-5
+        )
+    m = np.eye(d, dtype=np.float32)
+    m[0, 1] = m[1, 0] = 1.0  # sparse custom mask: not cluster-wise constant
+    custom = Topology(name="custom", n_devices=d, kind="dense", matrix=m)
     with pytest.raises(NotImplementedError, match="neighbor sets"):
-        fleet_merge_sharded(fleet_s, ring(d, hops=1), mesh, ("data",))
+        fleet_merge_sharded(fleet_s, custom, mesh, ("data",))
