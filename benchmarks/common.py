@@ -10,7 +10,7 @@ import numpy as np
 from repro.configs.oselm_edge import EDGE_CONFIGS, EdgeConfig
 from repro.core import OSELMState, ae_train_stream, init_autoencoder
 from repro.data import make_dataset
-from repro.data.pipeline import make_pattern_stream
+from repro.data.pipeline import make_pattern_stream, normalize_minmax
 
 
 def timed(fn, *args, warmup: int = 2, iters: int = 10) -> float:
@@ -47,9 +47,8 @@ def edge_config(dataset: str) -> EdgeConfig:
 
 
 def normalized_dataset(name: str, seed: int = 0, samples_per_class: int = 200):
-    """Dataset + min-max normalization to [0,1] (for sigmoid-output BP-NNs;
-    also stabilizes OS-ELM identity activations)."""
-    ds = make_dataset(name, seed=seed, samples_per_class=samples_per_class)
-    lo, hi = ds.x.min(0), ds.x.max(0)
-    x = (ds.x - lo) / (hi - lo + 1e-6)
-    return ds._replace(x=x.astype(np.float32))
+    """Dataset + the shared min-max normalization convention
+    (``repro.data.pipeline.normalize_minmax``)."""
+    return normalize_minmax(
+        make_dataset(name, seed=seed, samples_per_class=samples_per_class)
+    )

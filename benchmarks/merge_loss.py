@@ -10,8 +10,8 @@ from __future__ import annotations
 import jax
 
 from benchmarks.common import edge_config, normalized_dataset, train_edge_device
-from repro.core import ae_score, cooperative_update, to_uv
 from repro.data.pipeline import train_test_split
+from repro.scenarios.evaluate import pattern_loss_rows
 
 
 SCENARIOS = {
@@ -30,17 +30,8 @@ def run(dataset: str = "driving", seed: int = 0) -> dict:
     dev_a = train_edge_device(train, p_a, key=key, ecfg=ecfg, seed=seed)
     dev_b = train_edge_device(train, p_b, key=key, ecfg=ecfg, seed=seed + 1)
 
-    rows = {}
-    for pat in test.class_names:
-        x = test.pattern(pat)[:64]
-        rows[pat] = {
-            "A_before": float(ae_score(dev_a, x).mean()),
-            "B": float(ae_score(dev_b, x).mean()),
-        }
-    merged = cooperative_update(dev_a, to_uv(dev_b))
-    for pat in test.class_names:
-        x = test.pattern(pat)[:64]
-        rows[pat]["A_after"] = float(ae_score(merged, x).mean())
+    # per-pattern loss bars through the shared scenario evaluation path
+    rows = pattern_loss_rows(dev_a, dev_b, test, limit=64)
 
     # the paper's claims, checked mechanically. Note the driving
     # 'aggressive' pattern is intrinsically high-entropy (volatile

@@ -1,0 +1,271 @@
+"""Paper §5 headline tables — the proposed one-shot cooperative update
+vs BP-NN and R-round FedAvg at matched communication rounds.
+
+For every registered paper-analog scenario (``driving`` / ``har`` /
+``mnist_like``, ``repro.scenarios``) the harness:
+
+1. drives the scenario end-to-end through ``FleetRuntime`` on each
+   topology (smoke: ring + star — the paper's D2D gossip and its
+   Fig. 4/5 server exchange; full grid adds all_to_all +
+   hierarchical), reporting per-device (local, pre-merge) and
+   post-merge ON/IN-style ROC-AUC through the shared scenario
+   evaluation path (``repro.scenarios.evaluate``);
+2. trains the BP-NN3 autoencoder baseline (``repro.baselines.bpnn``)
+   on the pooled normal-phase data — the centralized comparison point
+   of Figs. 10/11/15/16;
+3. runs BP-NN3-FL (``repro.baselines.fedavg``) over the same
+   per-device normal-phase streams for R = (the runtime's admitted
+   merge count) rounds — the matched-rounds federated baseline — and
+   compares communication: FedAvg ships the full SLFN-equivalent model
+   2·D times per round, the proposed method ships Ñ(Ñ+m) payloads over
+   the topology only when the governor admits a merge.
+
+Asserted claims (the acceptance bar):
+  - all scenarios run green end-to-end through the runtime on every
+    requested topology (≥1 admitted merge, finite AUCs, compile-once);
+  - on at least one scenario the merged model's clean-device AUC is
+    within 0.02 of the BP-NN baseline on EVERY topology of the grid;
+  - that scenario's cooperative updates ship ≥5× fewer bytes than
+    R-round FedAvg at matched rounds (asserted for every sparse
+    topology; the full grid's all_to_all is the paper's deliberately
+    expensive D2D baseline and is reported, not asserted).
+
+Artifacts: ``BENCH_paper_eval.json`` (full report) plus a
+``BENCH_history.jsonl`` entry per run — wall-clock keys are gated by
+``benchmarks.history.check_regression`` (generous 50% threshold: a
+scenario wall includes dataset synthesis and compiles).
+
+    PYTHONPATH=src python benchmarks/paper_eval.py [--smoke|--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/paper_eval.py` from repo root
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.history import record_and_gate
+from repro.baselines import bpnn3_config, run_fedavg, train_bpnn
+from repro.baselines.fedavg import FedAvgConfig
+from repro.fleet.comm import fedavg_total_cost
+from repro.scenarios import SCENARIOS, bpnn_auc, make_scenario, run_scenario
+
+MERGE_EVERY = 16
+BPNN_HIDDEN = 128          # BP-NN3 width (its model is what FedAvg ships)
+BPNN_EPOCHS = 6
+AUC_MARGIN = 0.02          # "as accurately as BP-NN": within this margin
+COMM_FACTOR = 5.0          # proposed ships ≥5× fewer bytes than FedAvg
+
+SMOKE_SIZES = {"n_devices": 8, "ticks": 80}
+FULL_SIZES = {"n_devices": 24, "ticks": 120}
+SMOKE_TOPOLOGIES = ("ring", "star")
+FULL_TOPOLOGIES = ("ring", "star", "hierarchical", "all_to_all")
+# the full-mesh D2D exchange is the paper's expensive baseline — its
+# comm ratio is reported but never asserted against COMM_FACTOR
+UNASSERTED_TOPOLOGIES = ("all_to_all",)
+
+
+def _normal_phase_pool(sc) -> tuple[np.ndarray, list[np.ndarray]]:
+    """Training data the baselines may see: every device's NORMAL-phase
+    samples (drifted tails train the proposed fleet too, but handing
+    the anomalous concept to a baseline would corrupt its comparison).
+    Returns (pooled (N, F) for BP-NN, per-device list for FedAvg)."""
+    mask = sc.streams.pattern_of_device < sc.spec.n_normal
+    per_device = [sc.streams.xs[d][mask[d]] for d in range(sc.spec.n_devices)]
+    return np.concatenate(per_device), per_device
+
+
+def eval_scenario(
+    name: str,
+    sizes: dict,
+    topologies: tuple[str, ...],
+    *,
+    seed: int = 0,
+) -> dict:
+    """One scenario row of the headline table."""
+    spec = make_scenario(name, **sizes)
+    sc = spec.build()
+
+    rows: dict[str, dict] = {}
+    for topo in topologies:
+        t0 = time.perf_counter()
+        res = run_scenario(
+            spec, topo, merge_every=MERGE_EVERY, key_seed=seed, scenario=sc
+        )
+        wall = time.perf_counter() - t0
+        det = res.detection
+        rows[topo] = {
+            **res.auc_summary(),
+            "merges": res.merges,
+            "comm_bytes": res.comm_bytes,
+            "detection_delay_mean": det["delay_mean"],
+            "missed_detections": len(det["missed"]),
+            "false_positives": len(det["false_positives"]),
+            "wall_seconds": wall,
+        }
+
+    # ---- BP-NN3 centralized baseline on the pooled normal-phase data
+    x_pool, per_device = _normal_phase_pool(sc)
+    cfg = bpnn3_config(sc.n_features, BPNN_HIDDEN, batch=8, epochs=BPNN_EPOCHS)
+    t0 = time.perf_counter()
+    params = train_bpnn(jax.random.PRNGKey(seed), cfg, x_pool)
+    bp_auc = bpnn_auc(params, cfg, sc.x_eval, sc.y_eval)
+    bp_wall = time.perf_counter() - t0
+
+    # ---- BP-NN3-FL at MATCHED rounds. The AUC comparison trains once
+    # at the grid's max merge count; each topology's comm ratio uses
+    # FedAvg bytes at THAT topology's own admitted merge count, so the
+    # ratio really is bytes-per-matched-round.
+    rounds = max(1, max(rows[t]["merges"] for t in topologies))
+    t0 = time.perf_counter()
+    fa_params = run_fedavg(
+        jax.random.PRNGKey(seed + 1), cfg, per_device,
+        FedAvgConfig(rounds=rounds, local_epochs=1),
+    )
+    fa_auc = bpnn_auc(fa_params, cfg, sc.x_eval, sc.y_eval)
+    fa_wall = time.perf_counter() - t0
+    fa_bytes = fedavg_total_cost(
+        spec.n_devices, rounds, sc.n_features, BPNN_HIDDEN, sc.n_features
+    ).bytes_total
+    for topo in topologies:
+        r = rows[topo]
+        matched = fedavg_total_cost(
+            spec.n_devices, max(r["merges"], 1), sc.n_features,
+            BPNN_HIDDEN, sc.n_features,
+        ).bytes_total
+        r["fedavg_bytes_matched"] = matched
+        r["comm_ratio_vs_fedavg"] = matched / max(r["comm_bytes"], 1)
+
+    return {
+        "scenario": name,
+        "n_devices": spec.n_devices,
+        "ticks": spec.ticks,
+        "n_features": sc.n_features,
+        "n_hidden": spec.n_hidden,
+        "topologies": rows,
+        "bpnn": {"auc": bp_auc, "hidden": BPNN_HIDDEN, "epochs": BPNN_EPOCHS,
+                 "wall_seconds": bp_wall},
+        "fedavg": {"auc": fa_auc, "rounds": rounds, "bytes": fa_bytes,
+                   "wall_seconds": fa_wall},
+    }
+
+
+def check_claims(report: dict, topologies: tuple[str, ...]) -> dict:
+    """The mechanical form of the paper's headline claims."""
+    asserted = [t for t in topologies if t not in UNASSERTED_TOPOLOGIES]
+    green = {}
+    matches = []
+    for name, row in report["scenarios"].items():
+        for topo, r in row["topologies"].items():
+            green[f"{name}/{topo}"] = bool(
+                r["merges"] >= 1
+                and np.isfinite(r["merged_auc_mean"])
+                and np.isfinite(r["local_auc_mean"])
+            )
+        bp = row["bpnn"]["auc"]
+        near_bp = all(
+            row["topologies"][t]["clean_merged_auc_mean"] >= bp - AUC_MARGIN
+            for t in asserted
+        )
+        cheap = all(
+            row["topologies"][t]["comm_ratio_vs_fedavg"] >= COMM_FACTOR
+            for t in asserted
+        )
+        if near_bp and cheap:
+            matches.append(name)
+    return {
+        "all_green": all(green.values()),
+        "green": green,
+        "auc_and_comm_scenarios": matches,
+    }
+
+
+def run_bench(*, smoke: bool = True, seed: int = 0) -> dict:
+    sizes = SMOKE_SIZES if smoke else FULL_SIZES
+    topologies = SMOKE_TOPOLOGIES if smoke else FULL_TOPOLOGIES
+    scenarios = {
+        name: eval_scenario(name, sizes, topologies, seed=seed)
+        for name in sorted(SCENARIOS)
+    }
+    report = {
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "merge_every": MERGE_EVERY,
+        "auc_margin": AUC_MARGIN,
+        "comm_factor": COMM_FACTOR,
+        "scenarios": scenarios,
+    }
+    report["claims"] = check_claims(report, topologies)
+    return report
+
+
+def main(
+    smoke: bool = True,
+    out_path: str = "BENCH_paper_eval.json",
+    history_path: str = "BENCH_history.jsonl",
+) -> list[str]:
+    report = run_bench(smoke=smoke)
+    # persist BEFORE asserting — a failed claim still leaves the artifact
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+
+    lines = []
+    metrics: dict[str, float] = {}
+    for name, row in report["scenarios"].items():
+        bp, fa = row["bpnn"]["auc"], row["fedavg"]["auc"]
+        # gate on the per-SCENARIO total (runtime grid + both baselines):
+        # per-topology walls shuffle compile/build costs between rows run
+        # to run, but the scenario total is stable
+        metrics[f"{name}_total_us"] = 1e6 * (
+            sum(r["wall_seconds"] for r in row["topologies"].values())
+            + row["bpnn"]["wall_seconds"] + row["fedavg"]["wall_seconds"]
+        )
+        for topo, r in row["topologies"].items():
+            wall_us = r["wall_seconds"] * 1e6
+            metrics[f"{name}_{topo}_clean_auc"] = r["clean_merged_auc_mean"]
+            lines.append(
+                f"paper_eval/{name}/{topo},{wall_us:.1f},"
+                f"local={r['local_auc_mean']:.3f};"
+                f"merged={r['merged_auc_mean']:.3f};"
+                f"clean={r['clean_merged_auc_mean']:.3f};"
+                f"bpnn={bp:.3f};fedavg_r{row['fedavg']['rounds']}={fa:.3f};"
+                f"merges={r['merges']};comm_x={r['comm_ratio_vs_fedavg']:.1f}"
+            )
+
+    claims = report["claims"]
+    # all scenarios green end-to-end through the runtime on every topology
+    assert claims["all_green"], claims["green"]
+    # ≥1 scenario matches BP-NN within the margin AND ships ≥5× fewer
+    # bytes than matched-rounds FedAvg on every asserted topology
+    assert claims["auc_and_comm_scenarios"], report["scenarios"]
+    lines.append(
+        "# paper_eval claims ok — AUC+comm scenarios: "
+        f"{claims['auc_and_comm_scenarios']} → {out_path}"
+    )
+    # history gate AFTER the claims: a wall-clock regression should not
+    # mask (or be masked by) a paper-claim failure
+    record_and_gate("paper_eval", metrics, path=history_path, threshold=0.5)
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI grid — all three scenarios through the runtime on "
+             "ring + star (this IS the acceptance configuration)",
+    )
+    ap.add_argument("--full", action="store_true",
+                    help="the full topology grid (slow; bigger fleets)")
+    ap.add_argument("--out", default="BENCH_paper_eval.json")
+    args = ap.parse_args()
+    for line in main(smoke=not args.full, out_path=args.out):
+        print(line)
+    print(f"# paper_eval ok ({'smoke' if not args.full else 'full'} grid)")

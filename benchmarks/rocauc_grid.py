@@ -18,17 +18,17 @@ from benchmarks.common import edge_config, normalized_dataset, train_edge_device
 from repro.baselines import (
     bpnn3_config,
     bpnn5_config,
-    bpnn_score,
     run_fedavg,
     train_bpnn,
 )
 from repro.baselines.fedavg import FedAvgConfig
-from repro.core import ae_score, cooperative_update, to_uv
-from repro.data.metrics import roc_auc
 from repro.data.pipeline import anomaly_eval_arrays, make_pattern_stream, train_test_split
+from repro.scenarios.evaluate import bpnn_auc, pair_merge_eval
 
 
 def oselm_grids(train, test, ecfg, *, trials: int = 3, seed: int = 0):
+    """Before/after AUC per ordered pattern pair, through the shared
+    scenario evaluation path (``repro.scenarios.evaluate``)."""
     n = train.n_classes
     before = np.zeros((n, n))
     after = np.zeros((n, n))
@@ -38,10 +38,9 @@ def oselm_grids(train, test, ecfg, *, trials: int = 3, seed: int = 0):
             key = jax.random.PRNGKey(seed * 977 + t)
             dev_a = train_edge_device(train, pa, key=key, ecfg=ecfg, seed=seed + t)
             dev_b = train_edge_device(train, pb, key=key, ecfg=ecfg, seed=seed + t + 7)
-            x, y = anomaly_eval_arrays(test, [pa, pb], seed=seed + t)
-            aucs_b.append(roc_auc(np.asarray(ae_score(dev_a, x)), y))
-            merged = cooperative_update(dev_a, to_uv(dev_b))
-            aucs_a.append(roc_auc(np.asarray(ae_score(merged, x)), y))
+            b, a = pair_merge_eval(dev_a, dev_b, test, (pa, pb), seed=seed + t)
+            aucs_b.append(b)
+            aucs_a.append(a)
         before[pa, pb] = np.mean(aucs_b)
         after[pa, pb] = np.mean(aucs_a)
     return before, after
@@ -66,7 +65,7 @@ def bpnn_grid(train, test, cfg_builder, *, trials: int = 2, seed: int = 0, fedav
                 xab = jnp.asarray(np.concatenate([xa, xb]))
                 params = train_bpnn(key, cfg, xab)
             x, y = anomaly_eval_arrays(test, [pa, pb], seed=seed + t)
-            aucs.append(roc_auc(np.asarray(bpnn_score(params, cfg, jnp.asarray(x))), y))
+            aucs.append(bpnn_auc(params, cfg, x, y))
         grid[pa, pb] = np.mean(aucs)
     return grid
 

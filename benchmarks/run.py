@@ -27,6 +27,7 @@ BENCHES = [
     ("mesh_merge", "ours — psum cooperative update on a device mesh"),
     ("fleet_scale", "ours — fleet simulator: devices × topology grid"),
     ("serve_runtime", "ours — resident runtime soak: drift detection + gated merges"),
+    ("paper_eval", "paper §5 — scenario grid vs BP-NN / FedAvg at matched rounds"),
     ("fleet_ingest", "ours — fused tick ingest vs vmap+scan baseline"),
     ("kernel_bench", "ours — Pallas kernel micro-bench (interpret)"),
     ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),

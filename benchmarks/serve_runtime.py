@@ -54,11 +54,8 @@ if __package__ in (None, ""):  # `python benchmarks/serve_runtime.py` from repo 
     sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import normalized_dataset
-from repro.data import AnomalyDataset
-from repro.data.metrics import roc_auc
-from repro.data.pipeline import anomaly_eval_arrays, train_test_split
+from repro.data.pipeline import anomaly_eval_arrays, class_subset, train_test_split
 from repro.fleet import (
-    fleet_score,
     init_fleet,
     make_fleet_streams,
     random_drift_schedule,
@@ -71,6 +68,7 @@ from repro.runtime import (
     RuntimeConfig,
     TickFeed,
 )
+from repro.scenarios.evaluate import detection_stats, fleet_aucs
 
 N_DEVICES = 256        # acceptance: a D=256 resident fleet
 N_HIDDEN = 16
@@ -83,11 +81,6 @@ DRIFT_FRAC = 0.25
 RIDGE = 1e-3
 
 
-def _class_subset(ds: AnomalyDataset, n: int) -> AnomalyDataset:
-    mask = ds.y < n
-    return AnomalyDataset(ds.name, ds.x[mask], ds.y[mask], ds.class_names[:n])
-
-
 def build_scenario(n_devices: int, ticks: int, *, seed: int = 0):
     """Streams + eval arrays for the drift-to-held-out-concept soak:
     devices home on patterns {0..KEEP−1}, a DRIFT_FRAC fraction drifts
@@ -95,8 +88,8 @@ def build_scenario(n_devices: int, ticks: int, *, seed: int = 0):
     that pattern anomalous."""
     ds = normalized_dataset("har", seed=seed, samples_per_class=150)
     train, test = train_test_split(ds, 0.8, seed=seed)
-    train_k = _class_subset(train, KEEP + 1)
-    test_k = _class_subset(test, KEEP + 1)
+    train_k = class_subset(train, range(KEEP + 1))
+    test_k = class_subset(test, range(KEEP + 1))
     steps = ticks * BATCH
     drift = random_drift_schedule(
         n_devices, steps, KEEP + 1, frac=DRIFT_FRAC, seed=seed + 1,
@@ -143,26 +136,10 @@ def run_soak(
     cache_sizes = rt.assert_compile_once()
 
     gt = feed.drift_ticks()
-    flags_by_dev: dict[int, list[int]] = {}
-    for tick, dev in rt.detections:
-        flags_by_dev.setdefault(dev, []).append(tick)
-    delays, missed, false_pos = [], [], []
-    for dev, ticks_flagged in flags_by_dev.items():
-        # a flag BEFORE the device's scheduled drift is a false positive
-        # (it fired on a stationary stream), not a negative-delay detection
-        if dev not in gt or min(ticks_flagged) < gt[dev]:
-            false_pos.append(dev)
-    for dev, t0 in gt.items():
-        post = [t for t in flags_by_dev.get(dev, []) if t >= t0]
-        if post:
-            delays.append(min(post) - t0)
-        else:
-            missed.append(dev)
-    missed, false_pos = sorted(missed), sorted(false_pos)
+    det = detection_stats(rt.detections, gt)
 
     clean = [d for d in range(n_devices) if d not in gt]
-    scores = np.asarray(fleet_score(rt.states, x_eval))
-    aucs = [roc_auc(scores[d], y_eval) for d in clean]
+    aucs = fleet_aucs(rt.states, x_eval, y_eval)[clean]
 
     return {
         "gated": gate,
@@ -173,11 +150,11 @@ def run_soak(
         "merges": rt.governor.state.merges,
         "merge_latency_us_mean": float(np.mean(merge_lat) * 1e6) if merge_lat else None,
         "bytes_spent": rt.governor.state.bytes_spent,
-        "n_drift_events": len(gt),
-        "detection_delay_ticks_mean": float(np.mean(delays)) if delays else None,
-        "detection_delay_ticks_max": int(np.max(delays)) if delays else None,
-        "missed_detections": missed,
-        "false_positives": false_pos,
+        "n_drift_events": det["n_drift_events"],
+        "detection_delay_ticks_mean": det["delay_mean"],
+        "detection_delay_ticks_max": det["delay_max"],
+        "missed_detections": det["missed"],
+        "false_positives": det["false_positives"],
         "clean_auc_mean": float(np.mean(aucs)),
         "clean_auc_min": float(np.min(aucs)),
         "jit_cache_sizes": cache_sizes,

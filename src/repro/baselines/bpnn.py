@@ -11,6 +11,7 @@ unnecessary — the architectures are plain MLPs).
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Sequence
 
 import jax
@@ -71,6 +72,24 @@ def bpnn_score(params, cfg: BPNNConfig, x: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean((x - y) ** 2, axis=-1)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _epoch_fn(params, opt_state, xb, cfg: BPNNConfig):
+    """One epoch's scan over pre-shuffled batches. Module-level and
+    keyed on the (hashable) config so repeated ``train_bpnn`` calls —
+    FedAvg retrains every client every round — share one compilation
+    per (config, shape) instead of re-tracing a closure per call."""
+    opt = adam(cfg.lr)
+
+    def body(carry, batch):
+        p, s = carry
+        grads = jax.grad(bpnn_loss)(p, cfg, batch)
+        p, s = opt.update(grads, s, p)
+        return (p, s), None
+
+    (params, opt_state), _ = jax.lax.scan(body, (params, opt_state), xb)
+    return params, opt_state
+
+
 def train_bpnn(
     key: jax.Array,
     cfg: BPNNConfig,
@@ -81,30 +100,19 @@ def train_bpnn(
 ) -> list[dict]:
     """Mini-batch Adam training for ``epochs`` (paper: E epochs, batch k).
 
-    Uses a jitted scan over shuffled batches per epoch.
+    Uses a jitted scan over shuffled batches per epoch (compiled once
+    per (config, shape), shared across calls).
     """
     if params is None:
         params = init_bpnn(key, cfg)
-    opt = adam(cfg.lr)
-    opt_state = opt.init(params)
+    opt_state = adam(cfg.lr).init(params)
     n = x_train.shape[0]
     nb = n // cfg.batch
     epochs = cfg.epochs if epochs is None else epochs
-
-    @jax.jit
-    def epoch_fn(params, opt_state, xb):
-        def body(carry, batch):
-            p, s = carry
-            grads = jax.grad(bpnn_loss)(p, cfg, batch)
-            p, s = opt.update(grads, s, p)
-            return (p, s), None
-
-        (params, opt_state), _ = jax.lax.scan(body, (params, opt_state), xb)
-        return params, opt_state
 
     for e in range(epochs):
         key, k = jax.random.split(key)
         perm = jax.random.permutation(k, n)[: nb * cfg.batch]
         xb = x_train[perm].reshape(nb, cfg.batch, -1)
-        params, opt_state = epoch_fn(params, opt_state, xb)
+        params, opt_state = _epoch_fn(params, opt_state, xb, cfg)
     return list(params)

@@ -13,7 +13,13 @@ from repro.data.synthetic import (
     make_har_dataset,
     make_mnist_like_dataset,
 )
-from repro.data.pipeline import ShardedStream, make_pattern_stream, train_test_split
+from repro.data.pipeline import (
+    ShardedStream,
+    class_subset,
+    make_pattern_stream,
+    normalize_minmax,
+    train_test_split,
+)
 
 __all__ = [
     "DATASETS",
@@ -23,6 +29,8 @@ __all__ = [
     "make_har_dataset",
     "make_mnist_like_dataset",
     "ShardedStream",
+    "class_subset",
     "make_pattern_stream",
+    "normalize_minmax",
     "train_test_split",
 ]

@@ -13,6 +13,42 @@ import numpy as np
 from repro.data.synthetic import AnomalyDataset
 
 
+def normalize_minmax(ds: AnomalyDataset) -> AnomalyDataset:
+    """Per-feature min-max normalization to [0, 1] (for sigmoid-output
+    BP-NNs; also stabilizes OS-ELM identity activations). The single
+    normalization convention every paper-facing evaluation uses."""
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    x = (ds.x - lo) / (hi - lo + 1e-6)
+    return ds._replace(x=x.astype(np.float32))
+
+
+def class_subset(ds: AnomalyDataset, classes: Sequence[int | str]) -> AnomalyDataset:
+    """Subset to ``classes`` and REMAP labels: class ``classes[i]`` of
+    ``ds`` becomes class ``i`` of the result. This is how a scenario
+    carves its normal + held-out-anomaly pools out of a dataset whose
+    interesting classes need not be contiguous (e.g. HAR's walking /
+    sitting / standing homes with laying as the anomaly)."""
+    ids = [
+        ds.class_names.index(c) if isinstance(c, str) else int(c) for c in classes
+    ]
+    if len(set(ids)) != len(ids):
+        raise ValueError(f"duplicate classes in subset: {classes!r}")
+    for i in ids:
+        if not 0 <= i < ds.n_classes:
+            raise ValueError(f"class {i} outside dataset with {ds.n_classes} classes")
+    xs, ys = [], []
+    for new, old in enumerate(ids):
+        x = ds.x[ds.y == old]
+        xs.append(x)
+        ys.append(np.full(len(x), new, dtype=np.int32))
+    return AnomalyDataset(
+        ds.name,
+        np.concatenate(xs),
+        np.concatenate(ys),
+        tuple(ds.class_names[i] for i in ids),
+    )
+
+
 def train_test_split(
     ds: AnomalyDataset, train_frac: float = 0.8, seed: int = 0
 ) -> tuple[AnomalyDataset, AnomalyDataset]:

@@ -47,8 +47,27 @@ class FleetStreams(NamedTuple):
     def n_devices(self) -> int:
         return int(self.xs.shape[0])
 
+    @property
+    def n_steps(self) -> int:
+        return int(self.xs.shape[1])
+
     def initial_pattern(self, device: int) -> int:
         return int(self.pattern_of_device[device, 0])
+
+    def phase_boundaries(self, device: int) -> tuple[int, ...]:
+        """Start steps of ``device``'s concept phases: step 0 (its home
+        concept) plus one boundary per scheduled drift event, in stream
+        order. Strictly increasing; the scenario layer's validity
+        contract (and its hypothesis suite) are written against this."""
+        steps = [0]
+        for ev in sorted(self.drift, key=lambda e: e.step):
+            if ev.device == device and ev.step not in steps:
+                steps.append(ev.step)
+        return tuple(steps)
+
+    def drifted_devices(self) -> tuple[int, ...]:
+        """Devices with at least one scheduled drift event, ascending."""
+        return tuple(sorted({ev.device for ev in self.drift}))
 
 
 def random_drift_schedule(

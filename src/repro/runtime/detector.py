@@ -53,10 +53,31 @@ class DetectorConfig:
                                  # losses within this many sigmas of the
                                  # mean, so a ramp toward the detection
                                  # threshold is not absorbed into the band
-    warmup: int = 16             # calibration-only ticks (no flags)
+    warmup: int = 16             # calibration-only ticks (no flags), incl. skip
+    warmup_skip: int = 0         # leading ticks excluded from calibration
+                                 # entirely: a freshly-initialized model is
+                                 # still converging on its stream, and its
+                                 # decaying loss transient would inflate the
+                                 # Welford variance (and so the detection
+                                 # band) for the rest of the run
     patience: int = 8            # consecutive in-band ticks to re-admit
     baseline_alpha: float = 0.02  # slow in-band baseline tracking rate
-    min_sigma: float = 1e-6      # sigma floor (constant calibration streams)
+    min_sigma: float = 1e-6      # absolute sigma floor (constant streams)
+    rel_sigma: float = 0.0       # relative sigma floor, as a fraction of the
+                                 # baseline mean: a device whose calibration
+                                 # stream is nearly constant would otherwise
+                                 # carry a microscopic band and flag harmless
+                                 # wiggles a few times its (tiny) sigma
+
+    def __post_init__(self) -> None:
+        if self.warmup_skip < 0:
+            raise ValueError(f"need warmup_skip >= 0, got {self.warmup_skip}")
+        if self.warmup_skip >= self.warmup:
+            raise ValueError(
+                f"warmup ({self.warmup}) must exceed warmup_skip "
+                f"({self.warmup_skip}): flags would otherwise fire against "
+                "an empty (zero-width) calibration band"
+            )
 
 
 @jax.tree_util.register_dataclass
@@ -80,8 +101,16 @@ class DetectorState:
 
     def threshold(self, cfg: DetectorConfig) -> jnp.ndarray:
         """Current per-device detection threshold μ + k·σ."""
-        sigma = jnp.sqrt(self.var) + cfg.min_sigma
-        return self.mean + cfg.k_sigma * sigma
+        return self.mean + cfg.k_sigma * _sigma(self, cfg)
+
+
+def _sigma(state: DetectorState, cfg: DetectorConfig) -> jnp.ndarray:
+    """Effective per-device sigma: the Welford/tracked estimate, floored
+    absolutely (``min_sigma``) and relative to the baseline mean
+    (``rel_sigma``) so near-constant calibration streams cannot produce
+    a band narrower than the loss level itself warrants."""
+    sigma = jnp.sqrt(state.var) + cfg.min_sigma
+    return jnp.maximum(sigma, cfg.rel_sigma * state.mean)
 
 
 def init_detector(n_devices: int) -> DetectorState:
@@ -145,23 +174,30 @@ def detector_update(
     count = state.count + 1
     warm = state.count < cfg.warmup
 
-    # EWMA trajectory; seeded with the first observation instead of 0 so
-    # warmup is not spent climbing from an arbitrary origin
+    # EWMA trajectory; (re)seeded with the raw observation through the
+    # skip window so calibration starts from the converged loss level,
+    # not an arbitrary origin (or the init transient)
     ewma = jnp.where(
-        state.count == 0, losses,
+        state.count <= cfg.warmup_skip, losses,
         (1.0 - cfg.alpha) * state.ewma + cfg.alpha * losses,
     )
 
-    # Welford running baseline during warmup
+    # Welford running baseline during warmup — over the ticks AFTER the
+    # skip window only (eff counts calibration samples, not wall ticks)
+    eff_prev = state.count - cfg.warmup_skip
+    eff = eff_prev + 1
+    skipping = eff_prev < 0
     delta = losses - state.mean
-    mean_w = state.mean + delta / jnp.maximum(count, 1)
+    mean_w = state.mean + delta / jnp.maximum(eff, 1)
     var_w = jnp.maximum(
-        (state.var * jnp.maximum(state.count, 0) + delta * (losses - mean_w))
-        / jnp.maximum(count, 1),
+        (state.var * jnp.maximum(eff_prev, 0) + delta * (losses - mean_w))
+        / jnp.maximum(eff, 1),
         0.0,
     )
+    mean_w = jnp.where(skipping, state.mean, mean_w)
+    var_w = jnp.where(skipping, state.var, var_w)
 
-    sigma = jnp.sqrt(state.var) + cfg.min_sigma
+    sigma = _sigma(state, cfg)
     upper = state.mean + cfg.k_sigma * sigma
     readmit_band = state.mean + cfg.k_readmit * sigma
 

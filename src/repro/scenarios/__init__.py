@@ -1,0 +1,29 @@
+"""repro.scenarios — paper-fidelity workloads as streaming fleet feeds.
+
+``ScenarioSpec`` turns a workload (dataset + per-device pattern
+assignment + normal/anomalous phases + drift injection + held-out
+anomaly pool) into a runnable scenario that drives ``FleetRuntime``
+end-to-end on any topology; three paper-analog presets (``driving``,
+``har``, ``mnist_like``) mirror the paper's §5 evaluation. The shared
+evaluation path (``repro.scenarios.evaluate``) is the single scoring
+surface every paper-facing benchmark routes through.
+"""
+from repro.scenarios.evaluate import (
+    ScenarioResult,
+    bpnn_auc,
+    detection_stats,
+    device_auc,
+    fleet_aucs,
+    pair_merge_eval,
+    pattern_loss_rows,
+    run_scenario,
+    scenario_topology,
+)
+from repro.scenarios.spec import SCENARIOS, Scenario, ScenarioSpec, make_scenario
+
+__all__ = [
+    "SCENARIOS", "Scenario", "ScenarioSpec", "make_scenario",
+    "ScenarioResult", "bpnn_auc", "detection_stats", "device_auc",
+    "fleet_aucs", "pair_merge_eval", "pattern_loss_rows", "run_scenario",
+    "scenario_topology",
+]

@@ -1,0 +1,270 @@
+"""Shared scenario evaluation path — ONE scoring surface for every
+paper-facing number.
+
+Before this module, each benchmark re-implemented its own ad-hoc local
+loop over ``ae_score``/``roc_auc`` (``rocauc_grid``'s per-pair grids,
+``merge_loss``'s loss rows, ``serve_runtime``'s detection accounting).
+They now all route through here, so a merge/ingest refactor that shifts
+a paper-facing number fails in exactly one place:
+
+- ``device_auc`` / ``fleet_aucs`` / ``bpnn_auc`` — the §5.3.1 protocol
+  (trained patterns normal, held-out pool anomalous) for a single
+  OS-ELM state, a stacked fleet, and the BP-NN baselines;
+- ``pair_merge_eval`` / ``pattern_loss_rows`` — the two-device
+  cooperative-update evaluations behind the paper's Figs. 6–17;
+- ``detection_stats`` — drift detection delay / missed / false-positive
+  accounting in the tick clock;
+- ``run_scenario`` — a whole ``ScenarioSpec`` end-to-end through
+  ``FleetRuntime`` on any topology: local (pre-merge) per-device AUC,
+  post-merge AUC, merge cadence, comm bytes, detection stats.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines.bpnn import BPNNConfig, bpnn_score
+from repro.core import ae_score, cooperative_update, to_uv
+from repro.data.metrics import roc_auc
+from repro.data.pipeline import anomaly_eval_arrays
+from repro.data.synthetic import AnomalyDataset
+from repro.fleet.fleet import fleet_score, fleet_train
+from repro.fleet.topology import Topology, make_topology
+from repro.runtime.governor import GovernorConfig
+from repro.runtime.runtime import FleetRuntime, RuntimeConfig, TickReport
+from repro.scenarios.spec import ScenarioSpec
+
+__all__ = [
+    "ScenarioResult",
+    "bpnn_auc",
+    "detection_stats",
+    "device_auc",
+    "fleet_aucs",
+    "pair_merge_eval",
+    "pattern_loss_rows",
+    "run_scenario",
+    "scenario_topology",
+]
+
+
+# ------------------------------------------------------------ AUC primitives
+
+
+def device_auc(
+    state,
+    test: AnomalyDataset,
+    normal_patterns,
+    *,
+    anomaly_ratio: float = 0.1,
+    seed: int = 0,
+) -> float:
+    """§5.3.1 ROC-AUC of one OS-ELM state: ``normal_patterns`` of
+    ``test`` are negatives, every other class is subsampled positives."""
+    x, y = anomaly_eval_arrays(
+        test, list(normal_patterns), anomaly_ratio=anomaly_ratio, seed=seed
+    )
+    return roc_auc(np.asarray(ae_score(state, jnp.asarray(x))), y)
+
+
+def fleet_aucs(states, x_eval: np.ndarray, y_eval: np.ndarray) -> np.ndarray:
+    """Per-device AUC of a stacked fleet on shared eval arrays: (D,)."""
+    scores = np.asarray(fleet_score(states, jnp.asarray(x_eval)))
+    return np.asarray([roc_auc(scores[d], y_eval) for d in range(scores.shape[0])])
+
+
+def bpnn_auc(
+    params, cfg: BPNNConfig, x_eval: np.ndarray, y_eval: np.ndarray
+) -> float:
+    """The BP-NN baselines scored under the identical protocol."""
+    return roc_auc(np.asarray(bpnn_score(params, cfg, jnp.asarray(x_eval))), y_eval)
+
+
+# -------------------------------------------- two-device paper evaluations
+
+
+def pair_merge_eval(
+    dev_a,
+    dev_b,
+    test: AnomalyDataset,
+    patterns: tuple[int, int],
+    *,
+    anomaly_ratio: float = 0.1,
+    seed: int = 0,
+) -> tuple[float, float]:
+    """The Figs. 8–17 cell: Device-A's AUC before and after the one-shot
+    cooperative update with Device-B, eval normals = both trained
+    patterns. Returns ``(auc_before, auc_after)``."""
+    before = device_auc(
+        dev_a, test, patterns, anomaly_ratio=anomaly_ratio, seed=seed
+    )
+    merged = cooperative_update(dev_a, to_uv(dev_b))
+    after = device_auc(
+        merged, test, patterns, anomaly_ratio=anomaly_ratio, seed=seed
+    )
+    return before, after
+
+
+def pattern_loss_rows(
+    dev_a, dev_b, test: AnomalyDataset, *, limit: int = 64
+) -> dict[str, dict[str, float]]:
+    """The Figs. 6/7 bars: per-pattern mean reconstruction loss of
+    Device-A before the merge, Device-B, and A after merging B."""
+    merged = cooperative_update(dev_a, to_uv(dev_b))
+    rows: dict[str, dict[str, float]] = {}
+    for pat in test.class_names:
+        x = jnp.asarray(test.pattern(pat)[:limit])
+        rows[pat] = {
+            "A_before": float(ae_score(dev_a, x).mean()),
+            "B": float(ae_score(dev_b, x).mean()),
+            "A_after": float(ae_score(merged, x).mean()),
+        }
+    return rows
+
+
+# ------------------------------------------------------ detection accounting
+
+
+def detection_stats(
+    detections: list[tuple[int, int]], drift_ticks: dict[int, int]
+) -> dict:
+    """Detection-delay accounting in the tick clock: flags BEFORE a
+    device's scheduled drift are false positives (they fired on a
+    stationary stream); the first flag at/after it is the detection."""
+    flags_by_dev: dict[int, list[int]] = {}
+    for tick, dev in detections:
+        flags_by_dev.setdefault(dev, []).append(tick)
+    delays, missed, false_pos = [], [], []
+    for dev, flagged in flags_by_dev.items():
+        if dev not in drift_ticks or min(flagged) < drift_ticks[dev]:
+            false_pos.append(dev)
+    for dev, t0 in drift_ticks.items():
+        post = [t for t in flags_by_dev.get(dev, []) if t >= t0]
+        if post:
+            delays.append(min(post) - t0)
+        else:
+            missed.append(dev)
+    return {
+        "n_drift_events": len(drift_ticks),
+        "delays": sorted(delays),
+        "delay_mean": float(np.mean(delays)) if delays else None,
+        "delay_max": int(np.max(delays)) if delays else None,
+        "missed": sorted(missed),
+        "false_positives": sorted(false_pos),
+    }
+
+
+# --------------------------------------------------- scenario → FleetRuntime
+
+
+def scenario_topology(name: str, n_devices: int, **kw) -> Topology:
+    """A topology sized to a scenario's fleet. Ring defaults to the
+    minimal ±1 gossip band (the paper-eval comm comparisons quote it)."""
+    if name == "ring":
+        kw.setdefault("hops", 1)
+    return make_topology(name, n_devices, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioResult:
+    """One scenario × topology, end-to-end through the runtime."""
+
+    spec: ScenarioSpec
+    topology: str
+    local_aucs: np.ndarray      # (D,) stream-trained only — pre-merge
+    merged_aucs: np.ndarray     # (D,) after the runtime's cooperative updates
+    merges: int
+    comm_bytes: int             # governor ledger: bytes the merges shipped
+    detection: dict             # detection_stats output
+    reports: list[TickReport]
+    jit_cache_sizes: dict[str, int]
+
+    @property
+    def clean_devices(self) -> list[int]:
+        drifted = {ev.device for ev in self.spec.drift_schedule()}
+        return [d for d in range(self.spec.n_devices) if d not in drifted]
+
+    def auc_summary(self) -> dict[str, float]:
+        clean = self.clean_devices
+        return {
+            "local_auc_mean": float(self.local_aucs.mean()),
+            "merged_auc_mean": float(self.merged_aucs.mean()),
+            "merged_auc_min": float(self.merged_aucs.min()),
+            "clean_merged_auc_mean": float(self.merged_aucs[clean].mean()),
+        }
+
+
+# local (no-cooperation) baselines are topology-independent: cache them
+# per (spec, key_seed) so a topology grid trains the baseline fleet once
+_LOCAL_AUC_CACHE: dict[tuple[ScenarioSpec, int], np.ndarray] = {}
+
+
+def _local_aucs(sc, key, key_seed: int) -> np.ndarray:
+    cache_key = (sc.spec, key_seed)
+    if cache_key not in _LOCAL_AUC_CACHE:
+        if len(_LOCAL_AUC_CACHE) > 32:
+            _LOCAL_AUC_CACHE.clear()
+        local = fleet_train(sc.init_fleet(key), jnp.asarray(sc.streams.xs))
+        _LOCAL_AUC_CACHE[cache_key] = fleet_aucs(local, sc.x_eval, sc.y_eval)
+    return _LOCAL_AUC_CACHE[cache_key]
+
+
+def run_scenario(
+    spec: ScenarioSpec,
+    topology: str = "ring",
+    *,
+    topology_kwargs: dict | None = None,
+    merge_every: int = 16,
+    gate_merges: bool = True,
+    use_merge_kernel: bool = False,
+    use_ingest_kernel: bool = False,
+    ingest_backend: str = "auto",
+    key_seed: int = 0,
+    scenario=None,
+) -> ScenarioResult:
+    """Drive one built scenario end-to-end through ``FleetRuntime``.
+
+    Two numbers bracket the paper's claim: ``local_aucs`` (the same
+    initial fleet trained on the same streams with NO cooperation — the
+    "before" column) and ``merged_aucs`` (the runtime's tick loop with
+    governed cooperative updates — the "after" column). Both fleets
+    share the init key, so the delta is the merges.
+
+    ``scenario`` accepts the pre-built ``spec.build()`` so a topology
+    grid shares one stream synthesis; the local baseline is likewise
+    cached per (spec, key_seed) across topologies.
+    """
+    sc = spec.build() if scenario is None else scenario
+    key = jax.random.PRNGKey(key_seed)
+    topo = scenario_topology(topology, spec.n_devices, **(topology_kwargs or {}))
+    rt = FleetRuntime(
+        sc.init_fleet(key),
+        RuntimeConfig(
+            topology=topo,
+            ridge=spec.ridge,
+            detector=spec.detector,
+            governor=GovernorConfig(merge_every=merge_every),
+            gate_merges=gate_merges,
+            use_merge_kernel=use_merge_kernel,
+            use_ingest_kernel=use_ingest_kernel,
+            ingest_backend=ingest_backend,
+        ),
+    )
+    feed = sc.feed()
+    reports = rt.run(feed)
+    merged_aucs = fleet_aucs(rt.states, sc.x_eval, sc.y_eval)
+    local_aucs = _local_aucs(sc, key, key_seed)
+
+    return ScenarioResult(
+        spec=spec,
+        topology=topo.name,
+        local_aucs=local_aucs,
+        merged_aucs=merged_aucs,
+        merges=rt.governor.state.merges,
+        comm_bytes=rt.governor.state.bytes_spent,
+        detection=detection_stats(rt.detections, feed.drift_ticks()),
+        reports=reports,
+        jit_cache_sizes=rt.assert_compile_once(),
+    )

@@ -1,0 +1,240 @@
+"""Differential backend parity suite over the scenario layer.
+
+PR 2–4 accumulated three equivalent implementations of the tick-ingest
+hot path (the ``_fleet_train`` vmap-of-scan reference, the fused XLA
+block-Woodbury lowering, and the Pallas VMEM-resident kernel in
+interpret mode) and two of every topology merge (XLA reference vs the
+Pallas kernel family, masked and unmasked). This suite drives
+IDENTICAL scenario ticks — real paper-analog feeds from
+``repro.scenarios``, not random fixtures — through each implementation
+and asserts agreement within the documented f32 bounds:
+
+- Pallas ingest vs scan: ≤1e-5 per window (``kernels/fleet_ingest``
+  docstring), 1e-4/1e-5 after a multi-tick runtime accumulation;
+- fused XLA Woodbury vs scan: 2e-4/2e-5 (the c×c Cholesky reorders the
+  f32 accumulation; exact in real arithmetic);
+- merge kernels vs reference: ≤1e-5 (same convention as
+  ``tests/test_topology_kernels.py``).
+
+Covered axes: λ<1 (forgetting), masked participation (including
+all-masked), odd D/T/Ñ remainders (device counts off the block grid,
+tick windows off the sublane tile), and full ``TickReport`` agreement
+(losses, detector flags, merge decisions) across runtime backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleet import (
+    all_to_all,
+    fleet_merge,
+    fleet_merge_kernel,
+    fleet_merge_masked,
+    fleet_merge_masked_kernel,
+    hierarchical,
+    ring,
+    star,
+)
+from repro.fleet.fleet import _fleet_train
+from repro.kernels.fleet_ingest import fleet_ingest_kernel, fleet_ingest_xla
+from repro.runtime import FleetRuntime, GovernorConfig, RuntimeConfig
+from repro.scenarios import make_scenario
+
+jax.config.update("jax_platform_name", "cpu")
+
+RIDGE = 1e-3
+
+# odd everywhere: D off the block_d grid, T (= spec.batch) off the
+# sublane tile, Ñ off the lane/sublane tiles
+SPEC_ODD = dict(n_devices=5, ticks=10, batch=3, n_hidden=10)
+
+
+def _scenario(name="har", *, forget=1.0, **kw):
+    """A tiny paper-analog scenario (odd dims by default) shared by the
+    ingest/merge/runtime differential tests."""
+    over = {**SPEC_ODD, **kw}
+    if forget != 1.0:
+        over["forget"] = forget
+    return make_scenario(name, **over).build()
+
+
+def _assert_state_close(got, ref, *, rtol, atol):
+    np.testing.assert_allclose(np.asarray(got.p), np.asarray(ref.p),
+                               rtol=rtol, atol=atol)
+    np.testing.assert_allclose(np.asarray(got.beta), np.asarray(ref.beta),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------- ingest window parity
+
+
+@pytest.mark.parametrize("forget", [1.0, 0.95])
+@pytest.mark.parametrize("scenario", ["har", "mnist_like"])
+def test_ingest_backends_agree_on_scenario_windows(scenario, forget):
+    """One scenario tick window through scan, Woodbury and
+    Pallas-interpret: all three agree within the documented bounds —
+    including λ<1 and an odd (D=5, T=3·4, Ñ=10) layout."""
+    sc = _scenario(scenario, forget=forget)
+    fleet = sc.init_fleet(jax.random.PRNGKey(0))
+    # four consecutive tick batches as one window: T = 12 (odd vs the
+    # pallas sublane pad of 16, and a ragged tail for block_t=5)
+    feed = sc.feed()
+    win = jnp.concatenate([jnp.asarray(feed.tick_batch(t)) for t in range(4)], axis=1)
+
+    ref = _fleet_train(fleet, win)
+    got_x, _ = fleet_ingest_xla(fleet, win, block_t=5)
+    _assert_state_close(got_x, ref, rtol=2e-4, atol=2e-5)
+    got_p, _ = fleet_ingest_kernel(fleet, win, block_d=4, interpret=True)
+    _assert_state_close(got_p, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_ingest_losses_agree_on_scenario_windows():
+    """The pre-train drift-signal losses (what the detector consumes)
+    agree across the fused lowerings on a real scenario window."""
+    from repro.core import ae_score
+
+    sc = _scenario("har")
+    fleet = sc.init_fleet(jax.random.PRNGKey(0))
+    win = jnp.asarray(sc.feed().tick_batch(0))
+    ref_loss = jax.vmap(lambda s, xb: jnp.mean(ae_score(s, xb)))(fleet, win)
+    _, loss_x = fleet_ingest_xla(fleet, win)
+    _, loss_p = fleet_ingest_kernel(fleet, win, interpret=True)
+    np.testing.assert_allclose(np.asarray(loss_x), np.asarray(ref_loss),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(loss_p), np.asarray(ref_loss),
+                               rtol=1e-5, atol=1e-7)
+
+
+# ------------------------------------------------------ merge-state parity
+
+
+def _topologies(d):
+    return {
+        "ring_open": ring(d, hops=1),
+        "star": star(d),
+        "hierarchical_isolated": hierarchical(d, 2, head_exchange=False),
+        "all_to_all": all_to_all(d),
+    }
+
+
+@pytest.mark.parametrize("topo_name", sorted(_topologies(5)))
+def test_merge_kernel_parity_on_scenario_fleet(topo_name):
+    """Reference merge vs the Pallas merge-kernel family on a
+    scenario-trained fleet (odd D=5, Ñ=10), every topology kind."""
+    sc = _scenario("har")
+    fleet = sc.init_fleet(jax.random.PRNGKey(0))
+    fleet = _fleet_train(fleet, jnp.asarray(sc.streams.xs))
+    topo = _topologies(sc.spec.n_devices)[topo_name]
+    ref = fleet_merge(fleet, topo, ridge=RIDGE)
+    got = fleet_merge_kernel(fleet, topo, ridge=RIDGE, interpret=True)
+    _assert_state_close(got, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("topo_name", sorted(_topologies(5)))
+@pytest.mark.parametrize("mask", [
+    (1, 1, 1, 1, 1),
+    (1, 0, 1, 1, 0),   # quarantine two devices
+    (0, 0, 0, 0, 0),   # everyone quarantined (ridge keeps solves posed)
+])
+def test_masked_merge_parity_on_scenario_fleet(topo_name, mask):
+    """Masked participation: reference vs kernel agree, and masked-out
+    devices keep their exact pre-merge state on both paths."""
+    sc = _scenario("har")
+    fleet = sc.init_fleet(jax.random.PRNGKey(0))
+    fleet = _fleet_train(fleet, jnp.asarray(sc.streams.xs))
+    topo = _topologies(sc.spec.n_devices)[topo_name]
+    m = jnp.asarray(mask, jnp.float32)
+    ref = fleet_merge_masked(fleet, topo, m, ridge=RIDGE)
+    got = fleet_merge_masked_kernel(fleet, topo, m, ridge=RIDGE, interpret=True)
+    _assert_state_close(got, ref, rtol=1e-5, atol=1e-5)
+    out = np.flatnonzero(np.asarray(mask) == 0)
+    np.testing.assert_array_equal(np.asarray(ref.beta)[out],
+                                  np.asarray(fleet.beta)[out])
+    np.testing.assert_array_equal(np.asarray(got.beta)[out],
+                                  np.asarray(fleet.beta)[out])
+
+
+# --------------------------------------------------- runtime tick differential
+
+
+def _runtime(sc, topo, **kw):
+    return FleetRuntime(
+        sc.init_fleet(jax.random.PRNGKey(0)),
+        RuntimeConfig(
+            topology=topo,
+            ridge=sc.spec.ridge,
+            detector=sc.spec.detector,
+            governor=GovernorConfig(merge_every=4),
+            **kw,
+        ),
+    )
+
+
+@pytest.mark.parametrize("forget", [1.0, 0.97])
+@pytest.mark.parametrize("topo_fn", [lambda d: ring(d, hops=1), star])
+def test_runtime_tick_reports_agree_across_backends(topo_fn, forget):
+    """Identical scenario ticks through the scan-ingest runtime, the
+    fused-XLA runtime and the Pallas-interpret runtime: TickReports
+    agree tick by tick (losses within bounds; detector flags, merge
+    decisions and participant counts exactly), the merged states agree
+    at the end, and every runtime stays compile-once."""
+    sc = _scenario("har", forget=forget)
+    topo = topo_fn(sc.spec.n_devices)
+    rt_ref = _runtime(sc, topo)
+    rt_x = _runtime(sc, topo, use_ingest_kernel=True, ingest_backend="xla")
+    rt_p = _runtime(sc, topo, use_ingest_kernel=True, ingest_backend="pallas")
+
+    feed = sc.feed()
+    merges = 0
+    for t in range(feed.n_ticks):
+        batch = feed.tick_batch(t)
+        rep_ref = rt_ref.tick(batch)
+        rep_x = rt_x.tick(batch)
+        rep_p = rt_p.tick(batch)
+        for rep, tol in ((rep_x, 2e-4), (rep_p, 1e-5)):
+            np.testing.assert_allclose(rep.losses, rep_ref.losses,
+                                       rtol=tol, atol=1e-6)
+            assert np.array_equal(rep.drifted, rep_ref.drifted)
+            assert np.array_equal(rep.fresh_detections, rep_ref.fresh_detections)
+            assert rep.decision.merge == rep_ref.decision.merge
+            assert rep.decision.participants == rep_ref.decision.participants
+            assert rep.decision.round_bytes == rep_ref.decision.round_bytes
+        merges += rep_ref.decision.merge
+    assert merges > 0, "no merge admitted — the differential lost its teeth"
+    _assert_state_close(rt_x.states, rt_ref.states, rtol=5e-4, atol=5e-5)
+    _assert_state_close(rt_p.states, rt_ref.states, rtol=1e-4, atol=1e-5)
+    for rt in (rt_ref, rt_x, rt_p):
+        rt.assert_compile_once()
+
+
+def test_runtime_merge_kernel_differential_end_to_end():
+    """The merge-kernel runtime and the reference-merge runtime agree
+    on a whole gated scenario run (merge path differential, scan
+    ingest held fixed)."""
+    sc = _scenario("har")
+    topo = ring(sc.spec.n_devices, hops=1)
+    rt_ref = _runtime(sc, topo)
+    rt_k = _runtime(sc, topo, use_merge_kernel=True)
+    feed = sc.feed()
+    for t in range(feed.n_ticks):
+        batch = feed.tick_batch(t)
+        rep_ref = rt_ref.tick(batch)
+        rep_k = rt_k.tick(batch)
+        assert rep_k.decision.merge == rep_ref.decision.merge
+    _assert_state_close(rt_k.states, rt_ref.states, rtol=1e-4, atol=1e-5)
+
+
+def test_differential_covers_odd_remainders():
+    """The shared fixture really exercises the ragged paths: D=5 is off
+    the block_d=4 grid, the 12-sample window is off both the Pallas
+    sublane tile (16) and the block_t=5 Woodbury chain (ragged tail of
+    2), and Ñ=10 is off the lane tile."""
+    from repro.kernels.fleet_ingest import ingest_padding
+
+    sc = _scenario("har")
+    assert sc.spec.n_devices % 4 != 0
+    win_t = 4 * sc.spec.batch
+    pallas_pad, xla_pad = ingest_padding(win_t, block_t=5)
+    assert pallas_pad > 0 and xla_pad > 0
+    assert sc.spec.n_hidden % 8 != 0

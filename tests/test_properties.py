@@ -112,6 +112,79 @@ def test_nway_merge_equals_batch(d, nparts):
     np.testing.assert_allclose(merged.beta, elm.beta, rtol=5e-2, atol=1e-2)
 
 
+# ------------------------------------------------- scenario-spec properties
+
+from repro.scenarios import ScenarioSpec  # noqa: E402
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_devices=st.integers(min_value=1, max_value=9),
+    ticks=st.integers(min_value=2, max_value=12),
+    batch=st.integers(min_value=1, max_value=4),
+    assignment=st.sampled_from(["round_robin", "dirichlet"]),
+    drift_frac=st.floats(min_value=0.0, max_value=1.0),
+    normal=st.sampled_from([(0, 1), (3, 4), (0, 3, 4), (1,)]),
+    anomaly=st.sampled_from([(5,), (2, 5)]),
+    seed=st.integers(min_value=0, max_value=1),
+)
+def test_scenario_specs_always_yield_valid_feeds(
+    n_devices, ticks, batch, assignment, drift_frac, normal, anomaly, seed
+):
+    """∀ generated specs: the built feed is valid — phase boundaries
+    ordered and in-range, the held-out anomaly pool disjoint from every
+    pre-drift training stream, and the per-device pattern assignment
+    covers the whole fleet."""
+    spec = ScenarioSpec(
+        name="prop", dataset="har",
+        n_devices=n_devices, ticks=ticks, batch=batch,
+        normal_classes=normal, anomaly_classes=anomaly,
+        assignment=assignment, drift_frac=drift_frac,
+        samples_per_class=40, seed=seed,
+    )
+    sc = spec.build()
+    steps = spec.steps
+    homes = set(range(spec.n_normal))
+    anoms = set(spec.remapped_anomaly_classes())
+    assert not homes & anoms
+
+    # the drift schedule itself is well-formed: in-range steps/devices,
+    # targets drawn from the held-out pool only
+    events = sc.streams.drift
+    for ev in events:
+        assert 0 <= ev.device < n_devices
+        assert 0 <= ev.step < steps
+        assert ev.new_pattern in anoms
+    first_drift = {d: steps for d in range(n_devices)}
+    for ev in events:
+        first_drift[ev.device] = min(first_drift[ev.device], ev.step)
+
+    assert sc.streams.xs.shape == (n_devices, steps, sc.n_features)
+    assert sc.streams.x_init.shape[0] == n_devices
+    assert np.isfinite(sc.streams.xs).all()
+
+    for d in range(n_devices):
+        # phase boundaries strictly increasing, starting at 0, in-range
+        bounds = sc.streams.phase_boundaries(d)
+        assert bounds[0] == 0
+        assert all(b2 > b1 for b1, b2 in zip(bounds, bounds[1:]))
+        assert all(0 <= b < steps for b in bounds)
+        pats = set(sc.streams.pattern_of_device[d].tolist())
+        pre = set(sc.streams.pattern_of_device[d, : first_drift[d]].tolist())
+        # anomaly pool held out of every pre-drift training stream
+        assert not pre & anoms
+        # assignment covers the fleet: every device draws from its homes
+        assert pre <= homes or first_drift[d] == 0
+        if d not in sc.streams.drifted_devices():
+            assert pats <= homes
+            if assignment == "round_robin":
+                assert pats == {d % spec.n_normal}
+
+    # eval arrays: both classes present, positives subsampled
+    assert set(np.unique(sc.y_eval).tolist()) == {0, 1}
+    assert (sc.y_eval == 1).sum() >= 1
+
+
 @settings(max_examples=10, deadline=None)
 @given(dims, st.integers(min_value=1, max_value=8))
 def test_batchk_equals_k1(d, k):
