@@ -6,12 +6,14 @@ wall-clock trajectory of the hot paths survives across runs — locally
 across working sessions, in CI across workflow runs (the file is
 persisted through the actions cache).
 
-``check_regression`` compares a fresh set of wall-clock metrics (keys
-ending in ``_us``) against the MOST RECENT prior entry of the same
-benchmark on the same backend and fails on a >``threshold`` slowdown
-of any shared metric. The first run of a benchmark seeds the baseline
-(nothing to compare against); a metric that disappears or appears is
-ignored — only like-for-like keys gate.
+``check_regression`` compares a fresh set of gated metrics against the
+MOST RECENT prior entry of the same benchmark on the same backend:
+keys ending in ``_us`` are wall-clocks (lower is better — fail on a
+>``threshold`` slowdown) and keys ending in ``_ratio`` are
+efficiency ratios like the comm-vs-FedAvg factor (higher is better —
+fail on a >``threshold`` shrink). The first run of a benchmark seeds
+the baseline (nothing to compare against); a metric that disappears or
+appears is ignored — only like-for-like keys gate.
 """
 from __future__ import annotations
 
@@ -84,25 +86,31 @@ def check_regression(
     *,
     threshold: float = DEFAULT_THRESHOLD,
 ) -> list[str]:
-    """Wall-clock regression report vs a prior entry.
+    """Regression report vs a prior entry.
 
-    Compares every shared key ending in ``_us``; returns one line per
-    metric that got more than ``threshold`` slower. Empty list = pass
+    Compares every shared key ending in ``_us`` (wall-clock, lower is
+    better: fail when more than ``threshold`` slower) or ``_ratio``
+    (efficiency, higher is better: fail when more than ``threshold``
+    smaller). Returns one line per failing metric. Empty list = pass
     (including the baseline-seeding first run, prev=None)."""
     if prev is None:
         return []
     failures = []
     for key, new_val in metrics.items():
-        if not key.endswith("_us"):
-            continue
         old_val = prev.get("metrics", {}).get(key)
         if old_val is None or old_val <= 0:
             continue
         ratio = float(new_val) / float(old_val)
-        if ratio > 1.0 + threshold:
+        if key.endswith("_us") and ratio > 1.0 + threshold:
             failures.append(
                 f"{key}: {old_val:.1f}us -> {float(new_val):.1f}us "
                 f"({(ratio - 1.0) * 100:.0f}% slower, limit "
+                f"{threshold * 100:.0f}%)"
+            )
+        elif key.endswith("_ratio") and ratio < 1.0 - threshold:
+            failures.append(
+                f"{key}: {old_val:.1f}x -> {float(new_val):.1f}x "
+                f"({(1.0 - ratio) * 100:.0f}% smaller, limit "
                 f"{threshold * 100:.0f}%)"
             )
     return failures

@@ -63,6 +63,15 @@ def main() -> None:
     )
     args = ap.parse_args()
 
+    names = [name for name, _ in BENCHES]
+    if args.only and args.only not in names:
+        # a typo'd --only used to filter everything out and exit 0 —
+        # a "green" run that measured nothing
+        ap.error(
+            f"--only {args.only!r}: unknown benchmark "
+            f"(choose from: {', '.join(names)})"
+        )
+
     print("name,us_per_call,derived")
     failures = []
     for mod_name, desc in BENCHES:

@@ -31,7 +31,10 @@ Asserted claims:
     quarantine protects the fleet from the drifted concept) and stays
     above 0.9,
   - the comm-budget SLO works: a deliberately starved budget defers
-    merges (exercised on a small side fleet).
+    merges (exercised on a small side fleet),
+  - the int8 wire format works end-to-end: a quantized side soak ships
+    ~4x fewer bytes per merge round with clean-device AUC within ±0.02
+    of the f32 run (exercised on a small side fleet).
 
     PYTHONPATH=src python benchmarks/serve_runtime.py [--smoke]
 
@@ -194,11 +197,60 @@ def run_slo_probe(n_devices: int = 64, ticks: int = 96, *, seed: int = 0) -> dic
     }
 
 
+def run_quantized_probe(
+    n_devices: int = 64, ticks: int = 96, *, seed: int = 0
+) -> dict:
+    """Small side fleet proving the int8 wire format end-to-end through
+    the resident runtime: identical streams and initial fleets soaked at
+    ``payload_precision="f32"`` and ``"int8"``; the quantized run must
+    ship ~4x fewer bytes per admitted merge round while the clean-device
+    AUC stays within the paper's ±0.02 band. Quarantine-risk devices
+    ship exact f32 (detector-gated precision), so the realised per-round
+    ratio sits slightly under the raw 3.99x codec ratio."""
+    ds, fs, x_eval, y_eval = build_scenario(n_devices, ticks, seed=seed)
+    results = {}
+    for precision in ("f32", "int8"):
+        fleet = init_fleet(
+            jax.random.PRNGKey(seed), n_devices, ds.n_features, N_HIDDEN,
+            fs.x_init, activation="identity", ridge=RIDGE,
+        )
+        cfg = RuntimeConfig(
+            topology=ring(n_devices, hops=2), ridge=RIDGE,
+            detector=DetectorConfig(),
+            governor=GovernorConfig(merge_every=MERGE_EVERY),
+            payload_precision=precision,
+        )
+        rt = FleetRuntime(fleet, cfg)
+        feed = TickFeed(fs, BATCH)
+        rt.run(feed)
+        rt.assert_compile_once()
+        gt = feed.drift_ticks()
+        clean = [d for d in range(n_devices) if d not in gt]
+        aucs = fleet_aucs(rt.states, x_eval, y_eval)[clean]
+        results[precision] = {
+            "merges": rt.governor.state.merges,
+            "bytes_spent": rt.governor.state.bytes_spent,
+            "clean_auc_mean": float(np.mean(aucs)),
+        }
+    f32, q = results["f32"], results["int8"]
+    per_round_f32 = f32["bytes_spent"] / max(f32["merges"], 1)
+    per_round_q = q["bytes_spent"] / max(q["merges"], 1)
+    return {
+        "n_devices": n_devices,
+        "ticks": ticks,
+        "f32": f32,
+        "int8": q,
+        "byte_ratio_per_round": per_round_f32 / max(per_round_q, 1e-9),
+        "auc_delta": q["clean_auc_mean"] - f32["clean_auc_mean"],
+    }
+
+
 def run_bench(ticks: int, *, seed: int = 0) -> dict:
     ds, fs, x_eval, y_eval = build_scenario(N_DEVICES, ticks, seed=seed)
     gated = run_soak(fs, x_eval, y_eval, ds.n_features, gate=True, seed=seed)
     ungated = run_soak(fs, x_eval, y_eval, ds.n_features, gate=False, seed=seed)
     slo = run_slo_probe(seed=seed)
+    quantized = run_quantized_probe(seed=seed)
     return {
         "backend": jax.default_backend(),
         "n_devices": N_DEVICES,
@@ -209,6 +261,7 @@ def run_bench(ticks: int, *, seed: int = 0) -> dict:
         "gated": gated,
         "ungated": ungated,
         "slo_probe": slo,
+        "quantized_probe": quantized,
     }
 
 
@@ -243,6 +296,13 @@ def main(
         f"budget={s['budget_bytes_per_tick']:.0f};actual={s['bytes_per_tick']:.0f};"
         f"merges={s['merges']};deferred={s['deferred_budget']}"
     )
+    q = report["quantized_probe"]
+    lines.append(
+        f"serve_runtime/quantized/d{q['n_devices']},0.0,"
+        f"f32_bytes={q['f32']['bytes_spent']};int8_bytes={q['int8']['bytes_spent']};"
+        f"round_ratio={q['byte_ratio_per_round']:.2f};"
+        f"auc_delta={q['auc_delta']:+.4f}"
+    )
 
     g, u = report["gated"], report["ungated"]
     # the acceptance's soak shape: a D=256 fleet through >= 200 ticks
@@ -262,6 +322,10 @@ def main(
     assert s["deferred_budget"] > 0, s
     assert s["merges"] < s["candidate_rounds"], s
     assert s["bytes_per_tick"] <= s["budget_bytes_per_tick"], s
+    # int8 wire format: ~4x fewer bytes per merge round, AUC in-band
+    assert q["int8"]["merges"] > 0 and q["f32"]["merges"] > 0, q
+    assert q["byte_ratio_per_round"] >= 3.5, q
+    assert q["auc_delta"] >= -0.02, q
     lines.append(f"# serve-runtime artifact → {out_path}")
     return lines
 

@@ -30,11 +30,20 @@ from repro.fleet.fleet import (
     fleet_merge_kernel,
     fleet_merge_masked,
     fleet_merge_masked_kernel,
+    fleet_merge_quantized,
     fleet_score,
     fleet_to_uv,
     fleet_train,
     fleet_train_rounds,
     init_fleet,
+)
+from repro.fleet.quantize import (
+    apply_codec,
+    dequantize_tiles,
+    init_residual,
+    payload_precision_nbytes,
+    quantize_roundtrip,
+    quantize_tiles,
 )
 from repro.fleet.sharded import fleet_merge_sharded, fleet_train_sharded
 from repro.fleet.partition import (
@@ -58,9 +67,12 @@ __all__ = [
     "RoundCost", "fedavg_total_cost", "model_nbytes", "payload_nbytes",
     "topology_round_cost",
     "device_state", "fleet_from_uv", "fleet_merge", "fleet_merge_kernel",
-    "fleet_merge_masked", "fleet_merge_masked_kernel", "fleet_merge_sharded",
+    "fleet_merge_masked", "fleet_merge_masked_kernel", "fleet_merge_quantized",
+    "fleet_merge_sharded",
     "fleet_to_uv", "fleet_score", "fleet_train", "fleet_train_rounds",
     "fleet_train_sharded", "init_fleet",
+    "apply_codec", "dequantize_tiles", "init_residual",
+    "payload_precision_nbytes", "quantize_roundtrip", "quantize_tiles",
     "DriftEvent", "FleetStreams", "make_fleet_streams", "random_drift_schedule",
     "StalenessSchedule", "fleet_train_async",
     "TOPOLOGIES", "Topology", "all_to_all", "hierarchical", "make_topology",

@@ -17,12 +17,19 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.fleet.quantize import payload_precision_nbytes
 from repro.fleet.topology import Topology
 
 
-def payload_nbytes(n_hidden: int, n_out: int, itemsize: int = 4) -> int:
-    """The paper's per-payload cost: Ñ(Ñ+m) floats — U is (Ñ, Ñ), V is
-    (Ñ, m)."""
+def payload_nbytes(
+    n_hidden: int, n_out: int, itemsize: int = 4, *, precision: str | None = None
+) -> int:
+    """The paper's per-payload cost: Ñ(Ñ+m) values — U is (Ñ, Ñ), V is
+    (Ñ, m). ``precision`` overrides the raw ``itemsize`` with the wire
+    codec's exact accounting (int8 adds the per-tile f32 scales —
+    see ``repro.fleet.quantize``)."""
+    if precision is not None:
+        return payload_precision_nbytes(n_hidden, n_out, precision)
     return n_hidden * (n_hidden + n_out) * itemsize
 
 
@@ -39,6 +46,7 @@ class RoundCost:
     n_devices: int
     payloads: int
     bytes_total: int
+    precision: str = "f32"      # wire format of the counted payloads
 
     @property
     def bytes_per_device(self) -> float:
@@ -46,15 +54,29 @@ class RoundCost:
 
 
 def topology_round_cost(
-    topology: Topology, n_hidden: int, n_out: int, itemsize: int = 4
+    topology: Topology,
+    n_hidden: int,
+    n_out: int,
+    itemsize: int = 4,
+    *,
+    precision: str = "f32",
 ) -> RoundCost:
-    """Traffic of ONE cooperative update over ``topology``."""
-    nbytes = payload_nbytes(n_hidden, n_out, itemsize)
+    """Traffic of ONE cooperative update over ``topology``. With a
+    non-f32 ``precision`` every payload is counted at the quantized
+    wire size (mixed-precision rounds — some devices shipping f32, the
+    rest int8 — are blended by ``MergeGovernor.round_bytes``)."""
+    # f32 keeps the raw-itemsize path so callers can still model e.g.
+    # f64 wires; lossy precisions use the codec's exact accounting
+    nbytes = payload_nbytes(
+        n_hidden, n_out, itemsize,
+        precision=None if precision == "f32" else precision,
+    )
     return RoundCost(
         topology=topology.name,
         n_devices=topology.n_devices,
         payloads=topology.payloads_per_round,
         bytes_total=topology.payloads_per_round * nbytes,
+        precision=precision,
     )
 
 

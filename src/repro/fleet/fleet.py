@@ -51,6 +51,7 @@ from repro.core import (
     to_uv,
 )
 from repro.core.elm import invert_u, solve_beta
+from repro.fleet.quantize import apply_codec, quantize_roundtrip
 from repro.fleet.topology import Topology
 
 log = logging.getLogger(__name__)
@@ -172,13 +173,29 @@ def _bcast(x: jnp.ndarray, n_devices: int) -> jnp.ndarray:
     return jnp.broadcast_to(x[None], (n_devices,) + x.shape)
 
 
-def _merge_body(states: OSELMState, topology: Topology, ridge: float) -> OSELMState:
+def _codec_uv(states: OSELMState, precision: str, ridge: float) -> UV:
+    """The lossy wire view of a fleet's (U, V) payloads: pack, one-shot
+    quantize→dequantize round-trip at ``precision`` (no feedback state —
+    the stateful path is ``fleet_merge_quantized``), unpack."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    n = uv.u.shape[1]
+    w = quantize_roundtrip(jnp.concatenate([uv.u, uv.v], axis=2), precision)
+    return UV(u=w[:, :, :n], v=w[:, :, n:])
+
+
+def _merge_body(
+    states: OSELMState, topology: Topology, ridge: float, uv: UV | None = None
+) -> OSELMState:
     """Structure-aware Eq. 8 merge: mix sparsely, then solve once per
     equivalence class of merged (U, V) — fully-connected merges produce
     one global model (1 solve, broadcast), isolated clusters one model
     per cluster (C solves, gather), and only genuinely per-device
-    neighbor sets (open ring, custom dense masks) pay D solves."""
-    uv = fleet_to_uv(states, ridge=ridge)
+    neighbor sets (open ring, custom dense masks) pay D solves.
+
+    ``uv`` optionally injects pre-codec'd payloads (the quantized wire
+    view) in place of the exact ``fleet_to_uv`` extraction."""
+    if uv is None:
+        uv = fleet_to_uv(states, ridge=ridge)
     n_dev = topology.n_devices
 
     if topology.kind == "segment":
@@ -199,29 +216,35 @@ def _merge_body(states: OSELMState, topology: Topology, ridge: float) -> OSELMSt
     return fleet_from_uv(states, mixed, ridge=ridge)
 
 
-@partial(jax.jit, static_argnames=("topology", "ridge"))
+@partial(jax.jit, static_argnames=("topology", "ridge", "payload_precision"))
 def fleet_merge(
-    states: OSELMState, topology: Topology, *, ridge: float = 0.0
-) -> OSELMState:
-    """Topology-aware cooperative update: each device's merged (U, V) is
-    the Eq. 8 sum over its neighbor set (self included)."""
-    return _merge_body(states, topology, ridge)
-
-
-@partial(jax.jit, static_argnames=("topology", "ridge", "interpret"))
-def fleet_merge_kernel(
     states: OSELMState,
     topology: Topology,
     *,
     ridge: float = 0.0,
-    interpret: bool = True,
+    payload_precision: str = "f32",
 ) -> OSELMState:
-    """``fleet_merge`` on the Pallas merge-kernel family: the stacked
-    [U | V] payload is mixed by the sparsity-aware kernels and solved by
-    the fused Gauss-Jordan kernel (``repro.kernels.topology_merge``);
-    on the open ring the mix and solve are ONE kernel, so merged (U, V)
-    never round-trips through HBM. ``interpret=True`` runs on CPU;
-    pass False on TPU to lower via Mosaic."""
+    """Topology-aware cooperative update: each device's merged (U, V) is
+    the Eq. 8 sum over its neighbor set (self included).
+
+    ``payload_precision`` selects the wire format of the exchanged
+    payloads ("f32" exact, "f16"/"int8" block-quantized one-shot —
+    see ``repro.fleet.quantize``; the error-feedback stateful variant
+    is ``fleet_merge_quantized``)."""
+    uv = (None if payload_precision == "f32"
+          else _codec_uv(states, payload_precision, ridge))
+    return _merge_body(states, topology, ridge, uv=uv)
+
+
+def _kernel_merge_from_w(
+    states: OSELMState,
+    topology: Topology,
+    w: jnp.ndarray,
+    ridge: float,
+    interpret: bool,
+) -> OSELMState:
+    """Kernel-family merge of a pre-packed stacked payload ``w = [U | V]``
+    (possibly codec'd): the dispatch half of ``fleet_merge_kernel``."""
     from repro.kernels.topology_merge import (
         banded_merge_solve,
         dense_mix,
@@ -229,10 +252,8 @@ def fleet_merge_kernel(
         segment_sum_mix,
     )
 
-    uv = fleet_to_uv(states, ridge=ridge)
-    n = uv.u.shape[1]
+    n = states.p.shape[-1]
     n_dev = topology.n_devices
-    w = jnp.concatenate([uv.u, uv.v], axis=2)  # stacked [U | V] payloads
 
     if topology.kind == "banded" and not topology.band_closed:
         p, beta = banded_merge_solve(w, topology.hops, ridge=ridge, interpret=interpret)
@@ -270,15 +291,51 @@ def fleet_merge_kernel(
     return states.replace(beta=beta, p=p)
 
 
+@partial(jax.jit, static_argnames=("topology", "ridge", "interpret", "payload_precision"))
+def fleet_merge_kernel(
+    states: OSELMState,
+    topology: Topology,
+    *,
+    ridge: float = 0.0,
+    interpret: bool = True,
+    payload_precision: str = "f32",
+) -> OSELMState:
+    """``fleet_merge`` on the Pallas merge-kernel family: the stacked
+    [U | V] payload is mixed by the sparsity-aware kernels and solved by
+    the fused Gauss-Jordan kernel (``repro.kernels.topology_merge``);
+    on the open ring the mix and solve are ONE kernel, so merged (U, V)
+    never round-trips through HBM. ``interpret=True`` runs on CPU;
+    pass False on TPU to lower via Mosaic. ``payload_precision`` applies
+    the one-shot wire codec (f16 cast or the fused Pallas
+    ``quantize_pack`` for int8) before the mix."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    w = jnp.concatenate([uv.u, uv.v], axis=2)  # stacked [U | V] payloads
+    if payload_precision == "int8":
+        from repro.fleet.quantize import dequantize_tiles
+        from repro.kernels.quantize_pack import quantize_pack
+
+        codes, scales, _ = quantize_pack(uv.u, uv.v, interpret=interpret)
+        w = dequantize_tiles(codes, scales)
+    elif payload_precision != "f32":
+        w = quantize_roundtrip(w, payload_precision)
+    return _kernel_merge_from_w(states, topology, w, ridge, interpret)
+
+
 def _masked_merge_body(
-    states: OSELMState, topology: Topology, mask: jnp.ndarray, ridge: float
+    states: OSELMState,
+    topology: Topology,
+    mask: jnp.ndarray,
+    ridge: float,
+    uv: UV | None = None,
 ) -> OSELMState:
     """Participation-masked Eq. 8 merge. ``mask`` is a traced (D,) 0/1
     vector: devices with mask 0 neither contribute their (U, V) to any
     neighbor's sum nor receive the merged model (they keep their own
     (P, β) untouched). Because the mask is a runtime operand, gating a
-    device in or out between rounds never retraces the merge."""
-    uv = fleet_to_uv(states, ridge=ridge)
+    device in or out between rounds never retraces the merge. ``uv``
+    optionally injects pre-codec'd payloads."""
+    if uv is None:
+        uv = fleet_to_uv(states, ridge=ridge)
     mf = mask.astype(uv.u.dtype)
     wu = uv.u * mf[:, None, None]
     wv = uv.v * mf[:, None, None]
@@ -308,33 +365,38 @@ def _masked_merge_body(
     )
 
 
-@partial(jax.jit, static_argnames=("topology", "ridge"))
+@partial(jax.jit, static_argnames=("topology", "ridge", "payload_precision"))
 def fleet_merge_masked(
-    states: OSELMState, topology: Topology, mask: jnp.ndarray, *, ridge: float = 0.0
+    states: OSELMState,
+    topology: Topology,
+    mask: jnp.ndarray,
+    *,
+    ridge: float = 0.0,
+    payload_precision: str = "f32",
 ) -> OSELMState:
     """``fleet_merge`` with a runtime participation mask — the merge
     governor's quarantine primitive (drifted devices are masked out of
     the topology without recompiling). An all-ones mask reproduces
     ``fleet_merge`` exactly. Use ``ridge > 0`` so a cluster whose
     members are all quarantined still solves a well-posed (discarded)
-    system."""
-    return _masked_merge_body(states, topology, jnp.asarray(mask), ridge)
+    system. ``payload_precision`` applies the one-shot wire codec to
+    the participating payloads."""
+    uv = (None if payload_precision == "f32"
+          else _codec_uv(states, payload_precision, ridge))
+    return _masked_merge_body(states, topology, jnp.asarray(mask), ridge, uv=uv)
 
 
-@partial(jax.jit, static_argnames=("topology", "ridge", "interpret"))
-def fleet_merge_masked_kernel(
+def _masked_kernel_merge_from_w(
     states: OSELMState,
     topology: Topology,
     mask: jnp.ndarray,
-    *,
-    ridge: float = 0.0,
-    interpret: bool = True,
+    w: jnp.ndarray,
+    ridge: float,
+    interpret: bool,
 ) -> OSELMState:
-    """``fleet_merge_masked`` through the Pallas merge-kernel family:
-    segment topologies gate participation *inside* the segment-sum
-    kernel (``masked_segment_sum_mix``, scalar-prefetched mask — the
-    masked payload stack never exists in HBM); banded/dense paths fold
-    the mask into the payload before the existing kernels."""
+    """Kernel-family masked merge of a pre-packed (possibly codec'd)
+    stacked payload ``w``: the dispatch half of
+    ``fleet_merge_masked_kernel``."""
     from repro.kernels.topology_merge import (
         banded_merge_solve,
         dense_mix,
@@ -342,12 +404,9 @@ def fleet_merge_masked_kernel(
         masked_segment_sum_mix,
     )
 
-    uv = fleet_to_uv(states, ridge=ridge)
-    n = uv.u.shape[1]
+    n = states.p.shape[-1]
     n_dev = topology.n_devices
-    mask = jnp.asarray(mask)
-    mf = mask.astype(uv.u.dtype)
-    w = jnp.concatenate([uv.u, uv.v], axis=2)  # stacked [U | V] payloads
+    mf = mask.astype(w.dtype)
 
     if topology.kind == "segment":
         sums = masked_segment_sum_mix(
@@ -391,6 +450,120 @@ def fleet_merge_masked_kernel(
     return states.replace(
         beta=jnp.where(keep, merged.beta, states.beta),
         p=jnp.where(keep, merged.p, states.p),
+    )
+
+
+@partial(jax.jit, static_argnames=("topology", "ridge", "interpret", "payload_precision"))
+def fleet_merge_masked_kernel(
+    states: OSELMState,
+    topology: Topology,
+    mask: jnp.ndarray,
+    *,
+    ridge: float = 0.0,
+    interpret: bool = True,
+    payload_precision: str = "f32",
+) -> OSELMState:
+    """``fleet_merge_masked`` through the Pallas merge-kernel family:
+    segment topologies gate participation *inside* the segment-sum
+    kernel (``masked_segment_sum_mix``, scalar-prefetched mask — the
+    masked payload stack never exists in HBM); banded/dense paths fold
+    the mask into the payload before the existing kernels.
+    ``payload_precision`` applies the one-shot wire codec (fused Pallas
+    ``quantize_pack`` for int8) before the mix."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    w = jnp.concatenate([uv.u, uv.v], axis=2)  # stacked [U | V] payloads
+    if payload_precision == "int8":
+        from repro.fleet.quantize import dequantize_tiles
+        from repro.kernels.quantize_pack import quantize_pack
+
+        codes, scales, _ = quantize_pack(uv.u, uv.v, interpret=interpret)
+        w = dequantize_tiles(codes, scales)
+    elif payload_precision != "f32":
+        w = quantize_roundtrip(w, payload_precision)
+    return _masked_kernel_merge_from_w(
+        states, topology, jnp.asarray(mask), w, ridge, interpret
+    )
+
+
+def _quantized_merge_body(
+    states: OSELMState,
+    topology: Topology,
+    residual: jnp.ndarray | None,
+    payload_precision: str,
+    ridge: float,
+    mask: jnp.ndarray | None,
+    fp_mask: jnp.ndarray | None,
+    kernel: bool,
+    interpret: bool,
+) -> tuple[OSELMState, jnp.ndarray | None]:
+    """Unjitted body of ``fleet_merge_quantized`` (the runtime embeds it
+    in its own compile-once tick closures)."""
+    uv = fleet_to_uv(states, ridge=ridge)
+    n = uv.u.shape[1]
+    w = jnp.concatenate([uv.u, uv.v], axis=2)
+    roundtrip = None
+    if kernel and payload_precision == "int8":
+        from repro.fleet.quantize import dequantize_tiles
+        from repro.kernels.quantize_pack import quantize_pack
+
+        codes, scales, _ = quantize_pack(uv.u, uv.v, residual, interpret=interpret)
+        roundtrip = dequantize_tiles(codes, scales)
+    w_pub, new_resid = apply_codec(
+        w, payload_precision, residual=residual, fp_mask=fp_mask,
+        participate=mask, roundtrip=roundtrip,
+    )
+    uv_pub = UV(u=w_pub[:, :, :n], v=w_pub[:, :, n:])
+    if mask is None:
+        merged = (
+            _kernel_merge_from_w(states, topology, w_pub, ridge, interpret)
+            if kernel else _merge_body(states, topology, ridge, uv=uv_pub)
+        )
+    else:
+        mask = jnp.asarray(mask)
+        merged = (
+            _masked_kernel_merge_from_w(states, topology, mask, w_pub, ridge, interpret)
+            if kernel else _masked_merge_body(states, topology, mask, ridge, uv=uv_pub)
+        )
+    return merged, new_resid
+
+
+@partial(
+    jax.jit,
+    static_argnames=("topology", "payload_precision", "ridge", "kernel", "interpret"),
+)
+def fleet_merge_quantized(
+    states: OSELMState,
+    topology: Topology,
+    *,
+    residual: jnp.ndarray | None,
+    payload_precision: str = "int8",
+    ridge: float = 0.0,
+    mask: jnp.ndarray | None = None,
+    fp_mask: jnp.ndarray | None = None,
+    kernel: bool = False,
+    interpret: bool = True,
+) -> tuple[OSELMState, jnp.ndarray | None]:
+    """The stateful lossy merge round: every participating device
+    publishes its error-feedback-compensated quantized payload, the
+    topology mixes the published payloads (self-contribution included —
+    all members of a fully-connected merge still receive the identical
+    model, preserving the solve-per-equivalence-class structure), and
+    the per-device residual accumulators advance. Returns
+    ``(merged_states, residual')``.
+
+    - ``residual`` — (D, Ñ, Ñ+m) error-feedback backlog from
+      ``repro.fleet.quantize.init_residual`` (None = zero backlog,
+      one-shot semantics).
+    - ``mask`` — optional participation gate, exactly
+      ``fleet_merge_masked``; non-participants' residuals are untouched.
+    - ``fp_mask`` — optional per-device full-precision override
+      (quarantine-risk devices ship exact f32; their residual clears).
+    - ``kernel=True`` — publish through the fused Pallas
+      ``quantize_pack`` (int8) and merge through the kernel family.
+    """
+    return _quantized_merge_body(
+        states, topology, residual, payload_precision, ridge, mask, fp_mask,
+        kernel, interpret,
     )
 
 

@@ -1,0 +1,195 @@
+"""Block-quantized (U, V) merge payloads with error feedback.
+
+The paper's economy claim is that exchanging the E²LM intermediate
+results (U, V) is cheap; this module makes it ~4× cheaper again by
+quantizing the stacked merge payload w = [U | V] before it is
+"shipped" (mixed), exactly the selective-resource framing of the
+Pareto-FL line of work (Sensors 2024):
+
+- **per-tile int8 block quantization** — the payload's column axis is
+  tiled in ``TILE_COLS``-wide blocks; each (device, tile) slab is
+  quantized symmetrically against its own absolute maximum and shipped
+  as int8 codes plus ONE f32 scale per tile (``quantize_tiles`` /
+  ``dequantize_tiles``). U (a Gram matrix) and V live at very
+  different magnitudes, so per-tile scales are what keep the merged
+  solve well-conditioned — a single global scale would crush V.
+- **f16 payloads** — a straight half-precision round-trip; no scales.
+- **error feedback** — quantization error is never discarded: each
+  device accumulates the residual ``r ← (w + r) − dq(q(w + r))`` and
+  adds it back before the NEXT publish, so the published payload
+  sequence telescopes to the true sequence and repeated lossy merges
+  stay unbiased (the classic EF-compression argument, applied to the
+  state exchange).
+- **mixed-precision rounds** — ``apply_codec`` takes a per-device
+  ``fp_mask``: flagged (quarantine-risk) devices publish exact f32
+  payloads (and their residual backlog is cleared — the exact state
+  supersedes it), stable devices publish int8. Participation masking
+  composes: a masked-out device publishes nothing and its residual is
+  untouched.
+
+The Pallas fusion of this codec into the merge pack lives in
+``repro.kernels.quantize_pack`` (this module is its XLA reference);
+byte accounting for mixed-precision rounds is in ``repro.fleet.comm``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import OSELMState
+
+__all__ = [
+    "PRECISIONS",
+    "ITEMSIZE",
+    "TILE_COLS",
+    "apply_codec",
+    "dequantize_tiles",
+    "init_residual",
+    "n_col_tiles",
+    "payload_precision_nbytes",
+    "quantize_roundtrip",
+    "quantize_tiles",
+    "validate_precision",
+]
+
+PRECISIONS = ("f32", "f16", "int8")
+ITEMSIZE = {"f32": 4, "f16": 2, "int8": 1}
+TILE_COLS = 128          # one scale per (device, 128-column) payload slab
+SCALE_ITEMSIZE = 4       # per-tile scales ship as f32
+INT8_MAX = 127.0
+
+
+def validate_precision(precision: str) -> None:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown payload precision {precision!r}; have {PRECISIONS}"
+        )
+
+
+def n_col_tiles(n_cols: int, tile_cols: int = TILE_COLS) -> int:
+    """Number of quantization tiles (= per-payload scales) for a
+    payload with ``n_cols`` columns."""
+    return -(-n_cols // tile_cols)
+
+
+def payload_precision_nbytes(
+    n_hidden: int, n_out: int, precision: str, *, tile_cols: int = TILE_COLS
+) -> int:
+    """Bytes ONE (U, V) payload ships at ``precision``: Ñ(Ñ+m) codes at
+    the precision's itemsize, plus one f32 scale per column tile for
+    int8 (f32/f16 ship no scales)."""
+    validate_precision(precision)
+    numel = n_hidden * (n_hidden + n_out)
+    if precision == "int8":
+        return numel + n_col_tiles(n_hidden + n_out, tile_cols) * SCALE_ITEMSIZE
+    return numel * ITEMSIZE[precision]
+
+
+# --------------------------------------------------------------- tile codec
+
+
+def quantize_tiles(
+    x: jnp.ndarray, *, tile_cols: int = TILE_COLS
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tile int8 quantization of a stacked (D, R, C)
+    payload. Returns ``(codes, scales)``: int8 codes of the input shape
+    and one f32 scale per (device, column-tile), so
+    ``scales.shape == (D, ceil(C / tile_cols))``. An all-zero tile gets
+    scale 1.0 (codes 0) rather than a 0-divide."""
+    d, r, c = x.shape
+    nt = n_col_tiles(c, tile_cols)
+    cp = nt * tile_cols
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, cp - c)))
+    xt = xp.reshape(d, r, nt, tile_cols)
+    amax = jnp.max(jnp.abs(xt), axis=(1, 3))                     # (D, nt)
+    scales = jnp.where(amax > 0, amax / INT8_MAX, 1.0).astype(jnp.float32)
+    q = jnp.round(xt / scales[:, None, :, None])
+    codes = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return codes.reshape(d, r, cp)[:, :, :c], scales
+
+
+def dequantize_tiles(
+    codes: jnp.ndarray, scales: jnp.ndarray, *, tile_cols: int = TILE_COLS
+) -> jnp.ndarray:
+    """Inverse of ``quantize_tiles``: codes (D, R, C) int8 + per-tile
+    scales (D, nt) → f32 payload (D, R, C)."""
+    d, r, c = codes.shape
+    nt = scales.shape[1]
+    cp = nt * tile_cols
+    ct = jnp.pad(codes, ((0, 0), (0, 0), (0, cp - c))).reshape(d, r, nt, tile_cols)
+    out = ct.astype(jnp.float32) * scales[:, None, :, None]
+    return out.reshape(d, r, cp)[:, :, :c]
+
+
+def quantize_roundtrip(
+    x: jnp.ndarray, precision: str, *, tile_cols: int = TILE_COLS
+) -> jnp.ndarray:
+    """What the network delivers: the payload after one quantize →
+    dequantize trip at ``precision`` (identity for f32)."""
+    validate_precision(precision)
+    if precision == "f32":
+        return x
+    if precision == "f16":
+        return x.astype(jnp.float16).astype(jnp.float32)
+    codes, scales = quantize_tiles(x, tile_cols=tile_cols)
+    return dequantize_tiles(codes, scales, tile_cols=tile_cols)
+
+
+# ---------------------------------------------------- error-feedback codec
+
+
+def apply_codec(
+    w: jnp.ndarray,
+    precision: str,
+    *,
+    residual: jnp.ndarray | None = None,
+    fp_mask: jnp.ndarray | None = None,
+    participate: jnp.ndarray | None = None,
+    tile_cols: int = TILE_COLS,
+    roundtrip: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray | None]:
+    """One publish step of the lossy payload exchange.
+
+    ``w`` is the stacked (D, R, C) payload [U | V]. Returns
+    ``(published, residual')``:
+
+    - quantized devices publish ``dq(q(w + residual))`` and carry the
+      new error ``(w + residual) − published`` forward (error feedback);
+    - ``fp_mask`` devices (quarantine-risk) publish exact ``w`` and
+      their residual resets to 0 — the exact state supersedes any
+      backlog;
+    - ``participate``-masked-out devices publish nothing this round
+      (their ``published`` row is their exact ``w``, which the merge
+      mask zeroes anyway) and their residual is untouched.
+
+    ``roundtrip`` optionally injects a precomputed dequantized payload
+    (the Pallas ``quantize_pack`` kernel's output) so the kernel and
+    XLA paths share this blending logic. With ``residual=None`` the
+    codec is one-shot (no feedback state): residual' is still returned
+    (from a zero backlog) so callers can opt in later.
+    """
+    validate_precision(precision)
+    if precision == "f32":
+        return w, residual
+    r0 = jnp.zeros_like(w) if residual is None else residual
+    x = w + r0
+    if roundtrip is None:
+        roundtrip = quantize_roundtrip(x, precision, tile_cols=tile_cols)
+    published = roundtrip
+    new_r = x - roundtrip
+    if fp_mask is not None:
+        fp = jnp.asarray(fp_mask).astype(bool)[:, None, None]
+        published = jnp.where(fp, w, published)
+        new_r = jnp.where(fp, 0.0, new_r)
+    if participate is not None:
+        live = jnp.asarray(participate).astype(bool)[:, None, None]
+        published = jnp.where(live, published, w)
+        new_r = jnp.where(live, new_r, r0)
+    return published, new_r
+
+
+def init_residual(states: OSELMState) -> jnp.ndarray:
+    """A zeroed error-feedback accumulator for a stacked fleet: one
+    (Ñ, Ñ+m) payload residual per device."""
+    d, n = states.p.shape[0], states.p.shape[-1]
+    m = states.beta.shape[-1]
+    return jnp.zeros((d, n, n + m), jnp.float32)

@@ -20,6 +20,7 @@ from repro.kernels.ops import (
     uv_accum,
     uv_from_state_kernel,
 )
+from repro.kernels.quantize_pack import quantize_pack, quantize_pack_xla
 from repro.kernels.topology_merge import (
     banded_merge_solve,
     banded_mix,
@@ -37,6 +38,8 @@ __all__ = [
     "fleet_ingest_xla",
     "ingest_padding",
     "gla_forward",
+    "quantize_pack",
+    "quantize_pack_xla",
     "hidden_proj",
     "matmul_atb",
     "oselm_step_k1_kernel",

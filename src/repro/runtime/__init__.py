@@ -9,12 +9,21 @@ governor that quarantines drifted devices out of the topology merge
 comm-budget SLO, optional stale-payload merging, and checkpointed
 snapshots so the fleet survives restarts. The whole tick loop is a
 compile-once path (``FleetRuntime.assert_compile_once``).
+
+Merge payloads can ship quantized (``RuntimeConfig(payload_precision=
+"int8"|"f16")``): the error-feedback wire codec of
+``repro.fleet.quantize`` with a detector-gated precision policy —
+``quarantine_risk`` devices (drift-flagged, or re-admission hysteresis
+still elevated) publish exact f32 payloads while stable devices
+publish the quantized format, and the governor's byte ledger blends
+the two per round.
 """
 from repro.runtime.detector import (
     DetectorConfig,
     DetectorState,
     detector_update,
     init_detector,
+    quarantine_risk,
 )
 from repro.runtime.feed import TickFeed
 from repro.runtime.governor import (
@@ -27,6 +36,7 @@ from repro.runtime.runtime import FleetRuntime, RuntimeConfig, TickReport
 
 __all__ = [
     "DetectorConfig", "DetectorState", "detector_update", "init_detector",
+    "quarantine_risk",
     "TickFeed",
     "GovernorConfig", "GovernorState", "MergeDecision", "MergeGovernor",
     "FleetRuntime", "RuntimeConfig", "TickReport",

@@ -241,3 +241,18 @@ def detector_update(
         drifted=drifted, recovery=recovery,
     )
     return new, drifted, fresh
+
+
+def quarantine_risk(state: DetectorState, cfg: DetectorConfig) -> jnp.ndarray:
+    """(D,) bool — devices whose payloads should NOT be lossy this round.
+
+    The quantized merge path's precision policy: a device currently
+    quarantined, or calibrated but riding above the re-admission band
+    μ + k_re·σ (i.e. trending toward a flag), ships exact f32 payloads;
+    everyone else ships the quantized wire format. Devices still in
+    warmup are NOT risk — their band is uncalibrated, not suspicious,
+    and treating warmup as risk would make the whole first merge round
+    full-precision."""
+    calibrated = state.count >= cfg.warmup
+    elevated = calibrated & (state.ewma > state.mean + cfg.k_readmit * _sigma(state, cfg))
+    return state.drifted | elevated

@@ -60,10 +60,19 @@ class MergeDecision:
     reason: str            # "merge" | "cadence" | "budget" | "participants"
     participants: int
     round_bytes: int
+    fp_participants: int = 0   # participants shipping full-precision f32
 
 
 class MergeGovernor:
-    """Stateful merge scheduler for one resident fleet."""
+    """Stateful merge scheduler for one resident fleet.
+
+    ``payload_precision`` prices rounds at the quantized wire format
+    (``repro.fleet.quantize``): a non-f32 precision shrinks
+    ``round_bytes``, so the same ``budget_bytes_per_tick`` SLO admits
+    more participants (or more frequent merges) at the same traffic.
+    Mixed-precision rounds — the detector-gated policy where
+    quarantine-risk devices ship exact f32 — are blended per payload
+    via the ``fp_participants`` count."""
 
     def __init__(
         self,
@@ -73,13 +82,18 @@ class MergeGovernor:
         cfg: GovernorConfig,
         *,
         policies: tuple[FleetMaskFn, ...] = (),
+        payload_precision: str = "f32",
     ) -> None:
         self.topology = topology
         self.cfg = cfg
         self.policies = policies
+        self.payload_precision = payload_precision
         self.state = GovernorState()
         self._full_round_bytes = topology_round_cost(
             topology, n_hidden, n_out
+        ).bytes_total
+        self._q_round_bytes = topology_round_cost(
+            topology, n_hidden, n_out, precision=payload_precision
         ).bytes_total
 
     def participation(self, drifted: np.ndarray, losses: np.ndarray) -> np.ndarray:
@@ -89,29 +103,42 @@ class MergeGovernor:
             mask &= np.asarray(policy(losses), bool)
         return mask
 
-    def round_bytes(self, participants: int) -> int:
+    def round_bytes(self, participants: int, fp_participants: int = 0) -> int:
         """Round traffic with only ``participants`` of D devices live:
         payload counts scale with the participating fraction (a
-        quarantined device neither uploads nor downloads)."""
-        frac = participants / max(self.topology.n_devices, 1)
-        return int(self._full_round_bytes * frac)
+        quarantined device neither uploads nor downloads). Of those,
+        ``fp_participants`` ship f32 payloads and the rest the
+        configured wire precision — blended per payload share."""
+        d = max(self.topology.n_devices, 1)
+        fp = min(fp_participants, participants)
+        q = participants - fp
+        return int((self._full_round_bytes * fp + self._q_round_bytes * q) / d)
 
-    def decide(self, tick: int, mask: np.ndarray) -> MergeDecision:
+    def decide(
+        self, tick: int, mask: np.ndarray, fp_mask: np.ndarray | None = None
+    ) -> MergeDecision:
         """Admission control for one tick. Call exactly once per tick
-        (it advances the budget ledger's tick count)."""
+        (it advances the budget ledger's tick count). ``fp_mask`` is
+        the detector's quarantine-risk vector: participants it covers
+        are priced at f32 instead of the governed wire precision."""
         self.state.ticks = tick + 1
-        participants = int(np.asarray(mask).sum())
-        rb = self.round_bytes(participants)
+        mask = np.asarray(mask)
+        participants = int(mask.sum())
+        if self.payload_precision == "f32" or fp_mask is None:
+            fp = participants if self.payload_precision == "f32" else 0
+        else:
+            fp = int((mask.astype(bool) & np.asarray(fp_mask, bool)).sum())
+        rb = self.round_bytes(participants, fp)
         if (tick + 1) % self.cfg.merge_every != 0:
-            return MergeDecision(False, "cadence", participants, rb)
+            return MergeDecision(False, "cadence", participants, rb, fp)
         if participants < self.cfg.min_participants:
             self.state.deferred_participants += 1
-            return MergeDecision(False, "participants", participants, rb)
+            return MergeDecision(False, "participants", participants, rb, fp)
         if self.cfg.budget_bytes_per_tick is not None:
             projected = (self.state.bytes_spent + rb) / (tick + 1)
             if projected > self.cfg.budget_bytes_per_tick:
                 self.state.deferred_budget += 1
-                return MergeDecision(False, "budget", participants, rb)
+                return MergeDecision(False, "budget", participants, rb, fp)
         self.state.merges += 1
         self.state.bytes_spent += rb
-        return MergeDecision(True, "merge", participants, rb)
+        return MergeDecision(True, "merge", participants, rb, fp)

@@ -46,14 +46,21 @@ from repro.federated.selection import FleetMaskFn
 from repro.fleet.fleet import (
     _fleet_train,
     _masked_merge_body,
+    _quantized_merge_body,
     fleet_from_uv,
     fleet_merge_masked_kernel,
     fleet_to_uv,
 )
+from repro.fleet.quantize import init_residual, validate_precision
 from repro.fleet.staleness import StalenessSchedule, _lagged_gather
 from repro.fleet.topology import Topology
 from repro.kernels.fleet_ingest import fleet_ingest
-from repro.runtime.detector import DetectorConfig, detector_update, init_detector
+from repro.runtime.detector import (
+    DetectorConfig,
+    detector_update,
+    init_detector,
+    quarantine_risk,
+)
 from repro.runtime.feed import TickFeed
 from repro.runtime.governor import GovernorConfig, MergeDecision, MergeGovernor
 
@@ -69,6 +76,12 @@ class RuntimeConfig:
     gate_merges: bool = True          # False: no-quarantine baseline (everyone merges)
     staleness: StalenessSchedule | None = None
     use_merge_kernel: bool = False    # route merges through the Pallas family
+    payload_precision: str = "f32"    # merge wire format ("f32" | "f16" | "int8");
+                                      # non-f32 runs the error-feedback codec with
+                                      # the detector-gated precision policy:
+                                      # quarantine-risk devices ship f32 payloads,
+                                      # stable devices the quantized format
+                                      # (repro.fleet.quantize / detector.quarantine_risk)
     use_ingest_kernel: bool = False   # fused tick ingest (repro.kernels.fleet_ingest)
     ingest_backend: str = "auto"      # "pallas" | "xla" | "auto" (TPU→pallas)
     snapshot_every: int | None = None
@@ -106,6 +119,12 @@ class FleetRuntime:
             )
         if config.staleness is not None and len(config.staleness.lags) != n_devices:
             raise ValueError("staleness schedule device count mismatch")
+        validate_precision(config.payload_precision)
+        if config.payload_precision != "f32" and config.staleness is not None:
+            raise ValueError(
+                "quantized payloads are not supported with the stale "
+                "published-version ring yet (the ring stores exact payloads)"
+            )
         self.states = states
         self.config = config
         self.det = init_detector(n_devices)
@@ -114,7 +133,7 @@ class FleetRuntime:
         n_hidden, n_out = states.beta.shape[1], states.beta.shape[2]
         self.governor = MergeGovernor(
             config.topology, n_hidden, n_out, config.governor,
-            policies=policies,
+            policies=policies, payload_precision=config.payload_precision,
         )
         self.tick_no = 0
         self.merge_round = 0
@@ -163,7 +182,24 @@ class FleetRuntime:
         self._post_merge = False
         self._merge_mask = np.ones(n_devices, bool)
 
-        if config.use_merge_kernel:
+        # error-feedback accumulator of the quantized merge path (None on
+        # the exact-f32 path); advanced only on admitted merge rounds
+        self._residual = (
+            init_residual(states) if config.payload_precision != "f32" else None
+        )
+        if config.payload_precision != "f32":
+            precision = config.payload_precision
+
+            def merge_fresh(fleet, mask, fp_mask, residual):
+                # stateful lossy merge: fp_mask (quarantine-risk) devices
+                # publish exact f32, the rest the quantized wire format
+                # with error feedback — all three masks/accumulators are
+                # traced operands, so precision gating never retraces
+                return _quantized_merge_body(
+                    fleet, topology, residual, precision, ridge,
+                    mask, fp_mask, config.use_merge_kernel, True,
+                )
+        elif config.use_merge_kernel:
             def merge_fresh(fleet, mask):
                 return fleet_merge_masked_kernel(fleet, topology, mask, ridge=ridge)
         else:
@@ -239,7 +275,17 @@ class FleetRuntime:
             mask = self.governor.participation(drifted_np, losses_np)
         else:
             mask = np.ones(self.n_devices, bool)
-        decision = self.governor.decide(t, mask)
+        # detector-gated precision policy: on candidate rounds of a
+        # quantized runtime, quarantine-risk devices are priced (and
+        # shipped) at f32 — computed host-side from the post-update
+        # detector state, like the participation mask
+        fp_mask = None
+        if (
+            self._residual is not None
+            and (t + 1) % self.config.governor.merge_every == 0
+        ):
+            fp_mask = np.asarray(quarantine_risk(self.det, self.config.detector))
+        decision = self.governor.decide(t, mask, fp_mask)
 
         merge_seconds = None
         if decision.merge:
@@ -249,6 +295,10 @@ class FleetRuntime:
                 self.states, self._hist_u, self._hist_v = self._merge_stale(
                     self.states, self._hist_u, self._hist_v, mask_j,
                     jnp.int32(self.merge_round),
+                )
+            elif self._residual is not None:
+                self.states, self._residual = self._merge_fresh(
+                    self.states, mask_j, jnp.asarray(fp_mask), self._residual
                 )
             else:
                 self.states = self._merge_fresh(self.states, mask_j)
@@ -301,6 +351,8 @@ class FleetRuntime:
         if self._hist_u is not None:
             tree["hist_u"] = self._hist_u
             tree["hist_v"] = self._hist_v
+        if self._residual is not None:
+            tree["residual"] = self._residual
         return tree
 
     def snapshot(self) -> Path:
@@ -332,6 +384,8 @@ class FleetRuntime:
         if self._hist_u is not None:
             self._hist_u = tree["hist_u"]
             self._hist_v = tree["hist_v"]
+        if self._residual is not None:
+            self._residual = tree["residual"]
         return self.tick_no
 
     # ---------------------------------------------------------- compile-once

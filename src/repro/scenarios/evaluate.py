@@ -180,6 +180,7 @@ class ScenarioResult:
     detection: dict             # detection_stats output
     reports: list[TickReport]
     jit_cache_sizes: dict[str, int]
+    payload_precision: str = "f32"   # wire format the merges shipped at
 
     @property
     def clean_devices(self) -> list[int]:
@@ -221,6 +222,7 @@ def run_scenario(
     use_merge_kernel: bool = False,
     use_ingest_kernel: bool = False,
     ingest_backend: str = "auto",
+    payload_precision: str = "f32",
     key_seed: int = 0,
     scenario=None,
 ) -> ScenarioResult:
@@ -250,6 +252,7 @@ def run_scenario(
             use_merge_kernel=use_merge_kernel,
             use_ingest_kernel=use_ingest_kernel,
             ingest_backend=ingest_backend,
+            payload_precision=payload_precision,
         ),
     )
     feed = sc.feed()
@@ -267,4 +270,5 @@ def run_scenario(
         detection=detection_stats(rt.detections, feed.drift_ticks()),
         reports=reports,
         jit_cache_sizes=rt.assert_compile_once(),
+        payload_precision=payload_precision,
     )

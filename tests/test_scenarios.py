@@ -148,6 +148,24 @@ def test_golden_scenario_metrics(scenario):
     assert abs(d["delay_mean"] - g["delay"]) <= DELAY_BAND, d
 
 
+def test_golden_quantized_comm_ratio():
+    """int8 wire-format lock on the driving golden run: the SAME merge
+    cadence and in-band AUC at ≥3.8× fewer merge bytes than f32. This
+    is the codec half of the paper-eval ≥60× comm-vs-FedAvg claim (the
+    FedAvg half is history-gated by benchmarks/paper_eval.py)."""
+    spec = make_scenario("driving", **GOLDEN_SIZES["driving"])
+    f32 = run_scenario(spec, "ring", merge_every=16, key_seed=0)
+    q = run_scenario(
+        spec, "ring", merge_every=16, key_seed=0, payload_precision="int8"
+    )
+    g = GOLDEN["driving"]
+    assert q.payload_precision == "int8"
+    assert q.merges == f32.merges == g["merges"]
+    assert abs(float(q.merged_aucs.mean()) - g["merged"]) <= AUC_BAND
+    ratio = f32.comm_bytes / q.comm_bytes
+    assert ratio >= 3.8, (f32.comm_bytes, q.comm_bytes)
+
+
 # --------------------------------------------------------- shared eval path
 
 
