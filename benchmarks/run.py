@@ -31,6 +31,7 @@ BENCHES = [
     ("fleet_ingest", "ours — fused tick ingest vs vmap+scan baseline"),
     ("kernel_bench", "ours — Pallas kernel micro-bench (interpret)"),
     ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),
+    ("robust_fleet", "ours — Byzantine-robust merges + fault-injection chaos soak"),
     ("roofline_report", "ours — dry-run roofline artifact summary"),
 ]
 

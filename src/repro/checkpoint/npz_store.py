@@ -13,8 +13,10 @@ the federated edge-device state (OS-ELM P/β are plain arrays).
 from __future__ import annotations
 
 import json
+import logging
 import os
 import tempfile
+import zipfile
 from pathlib import Path
 from typing import Any
 
@@ -22,6 +24,8 @@ import jax
 import numpy as np
 
 PyTree = Any
+
+log = logging.getLogger(__name__)
 
 _SEP = "␟"  # symbol-for-unit-separator: never in key names
 
@@ -108,10 +112,39 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, template: PyTree, step: int | None = None) -> tuple[PyTree, int]:
-        step = self.latest_step() if step is None else step
-        if step is None:
+        """Restore the requested (or latest readable) checkpoint.
+
+        A crash can leave the newest snapshot truncated or corrupt
+        (``save_pytree``'s rename is atomic, but the disk under it may
+        not be). With ``step=None`` the manager walks backwards from the
+        latest checkpoint, warning and falling back past any unreadable
+        file, so a recovering runtime resumes from the newest snapshot
+        that actually loads. An explicitly requested ``step`` still
+        fails loudly — the caller asked for that exact state."""
+        if step is not None:
+            return load_pytree(template, self.dir / f"ckpt_{step:08d}.npz"), step
+        steps = sorted(
+            (int(p.stem.split("_")[1]) for p in self.dir.glob("ckpt_*.npz")),
+            reverse=True,
+        )
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        return load_pytree(template, self.dir / f"ckpt_{step:08d}.npz"), step
+        last_err: Exception | None = None
+        for s in steps:
+            path = self.dir / f"ckpt_{s:08d}.npz"
+            try:
+                return load_pytree(template, path), s
+            except (OSError, ValueError, KeyError, EOFError,
+                    zipfile.BadZipFile, json.JSONDecodeError) as e:
+                log.warning(
+                    "checkpoint %s is unreadable (%s: %s) — falling back to "
+                    "the previous step", path.name, type(e).__name__, e,
+                )
+                last_err = e
+        raise FileNotFoundError(
+            f"no readable checkpoint in {self.dir} "
+            f"({len(steps)} candidates, all unreadable)"
+        ) from last_err
 
     def _gc(self) -> None:
         ckpts = sorted(self.dir.glob("ckpt_*.npz"))

@@ -16,6 +16,15 @@ to a psum of O(clusters) segment sums per shard (``sharded``).
 Serve-loop integration still builds on the stacked-(U, V) layout
 defined here.
 """
+from repro.fleet.faults import FAULT_KINDS, FaultInjector, FaultSpec
+from repro.fleet.robust import (
+    RobustConfig,
+    finite_payload_mask,
+    fleet_merge_robust,
+    payload_clip,
+    payload_outlier_scores,
+    robust_merge_from_w,
+)
 from repro.fleet.comm import (
     RoundCost,
     fedavg_total_cost,
@@ -64,6 +73,9 @@ from repro.fleet.topology import (
 )
 
 __all__ = [
+    "FAULT_KINDS", "FaultInjector", "FaultSpec",
+    "RobustConfig", "finite_payload_mask", "fleet_merge_robust",
+    "payload_clip", "payload_outlier_scores", "robust_merge_from_w",
     "RoundCost", "fedavg_total_cost", "model_nbytes", "payload_nbytes",
     "topology_round_cost",
     "device_state", "fleet_from_uv", "fleet_merge", "fleet_merge_kernel",

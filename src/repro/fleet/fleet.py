@@ -39,6 +39,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import (
     UV,
@@ -158,14 +159,65 @@ def fleet_to_uv(states: OSELMState, *, ridge: float = 0.0) -> UV:
     return jax.vmap(partial(to_uv, ridge=ridge))(states)
 
 
-def fleet_from_uv(states: OSELMState, uv: UV, *, ridge: float = 0.0) -> OSELMState:
+def fleet_from_uv(
+    states: OSELMState, uv: UV, *, ridge: float = 0.0, nonfinite: str = "error"
+) -> OSELMState:
     """§4.2 step 5 per device: recover (P, β) from each device's merged
-    (U, V)."""
+    (U, V).
+
+    A non-finite (U, V) — one NaN payload in an Eq. 8 sum — would
+    silently poison the recovered (P, β) of every device it merged
+    into. ``nonfinite="error"`` (default) raises a ValueError naming
+    the bad devices when the payloads are concrete (inside a jit trace
+    the check is skipped — guard at the boundary instead, as
+    ``FleetRuntime`` does); ``"repair"`` replaces a bad device's (U, V)
+    with (I, 0), resetting it to an untrained-but-solvable state."""
+    if nonfinite not in ("error", "repair"):
+        raise ValueError(f"nonfinite must be 'error' or 'repair', got {nonfinite!r}")
+    ok = jnp.isfinite(uv.u).all(axis=(1, 2)) & jnp.isfinite(uv.v).all(axis=(1, 2))
+    if nonfinite == "repair":
+        eye = jnp.eye(uv.u.shape[-1], dtype=uv.u.dtype)
+        uv = UV(
+            u=jnp.where(ok[:, None, None], uv.u, eye[None]),
+            v=jnp.where(ok[:, None, None], uv.v, jnp.zeros_like(uv.v)),
+        )
+    else:
+        try:
+            ok_np = np.asarray(ok)
+        except (jax.errors.ConcretizationTypeError,
+                jax.errors.TracerArrayConversionError):
+            ok_np = None  # traced — eager check not possible here
+        if ok_np is not None and not ok_np.all():
+            raise ValueError(
+                "non-finite merged (U, V) for devices "
+                f"{np.flatnonzero(~ok_np).tolist()} — a corrupt payload "
+                "reached the §4.2 solve; reject it upstream "
+                "(repro.fleet.robust.finite_payload_mask) or pass "
+                "nonfinite='repair' to reset those devices to (I, 0)"
+            )
     return jax.vmap(partial(from_uv, ridge=ridge))(states, uv)
 
 
-def _solve_uv(u: jnp.ndarray, v: jnp.ndarray, ridge: float):
-    """One §4.2 step-5 solve: P = (U+εI)⁻¹, β = (U+εI)⁻¹V."""
+def _solve_uv(u: jnp.ndarray, v: jnp.ndarray, ridge: float, nonfinite: str = "error"):
+    """One §4.2 step-5 solve: P = (U+εI)⁻¹, β = (U+εI)⁻¹V.
+
+    Same non-finite guard as ``fleet_from_uv``, for the single-matrix
+    solves of the fully-connected/cluster merge paths (eager calls
+    fail loudly; traced/vmapped calls skip the check)."""
+    ok = jnp.isfinite(u).all() & jnp.isfinite(v).all()
+    if nonfinite == "repair":
+        u = jnp.where(ok, u, jnp.eye(u.shape[-1], dtype=u.dtype))
+        v = jnp.where(ok, v, jnp.zeros_like(v))
+    else:
+        try:
+            concrete = bool(ok)
+        except jax.errors.ConcretizationTypeError:
+            concrete = None
+        if concrete is False:
+            raise ValueError(
+                "non-finite (U, V) reached the §4.2 solve — reject the "
+                "corrupt payload upstream or pass nonfinite='repair'"
+            )
     return invert_u(u, ridge=ridge), solve_beta(u, v, ridge=ridge)
 
 
@@ -327,13 +379,18 @@ def _masked_merge_body(
     mask: jnp.ndarray,
     ridge: float,
     uv: UV | None = None,
+    receive: jnp.ndarray | None = None,
 ) -> OSELMState:
     """Participation-masked Eq. 8 merge. ``mask`` is a traced (D,) 0/1
     vector: devices with mask 0 neither contribute their (U, V) to any
     neighbor's sum nor receive the merged model (they keep their own
     (P, β) untouched). Because the mask is a runtime operand, gating a
     device in or out between rounds never retraces the merge. ``uv``
-    optionally injects pre-codec'd payloads."""
+    optionally injects pre-codec'd payloads. ``receive`` optionally
+    widens the set of devices that DOWNLOAD the merged model beyond the
+    contributors (robust quarantine distrusts a device's payload while
+    still serving it the fleet model); None keeps the symmetric
+    contribute-and-receive semantics."""
     if uv is None:
         uv = fleet_to_uv(states, ridge=ridge)
     mf = mask.astype(uv.u.dtype)
@@ -358,7 +415,8 @@ def _masked_merge_body(
         mixed = UV(u=topology.mix(wu), v=topology.mix(wv))
         merged = fleet_from_uv(states, mixed, ridge=ridge)
 
-    keep = (mf > 0)[:, None, None]
+    kf = mf if receive is None else receive.astype(mf.dtype)
+    keep = (kf > 0)[:, None, None]
     return states.replace(
         beta=jnp.where(keep, merged.beta, states.beta),
         p=jnp.where(keep, merged.p, states.p),
@@ -393,10 +451,12 @@ def _masked_kernel_merge_from_w(
     w: jnp.ndarray,
     ridge: float,
     interpret: bool,
+    receive: jnp.ndarray | None = None,
 ) -> OSELMState:
     """Kernel-family masked merge of a pre-packed (possibly codec'd)
     stacked payload ``w``: the dispatch half of
-    ``fleet_merge_masked_kernel``."""
+    ``fleet_merge_masked_kernel``. ``receive`` widens the download set
+    exactly as in ``_masked_merge_body``."""
     from repro.kernels.topology_merge import (
         banded_merge_solve,
         dense_mix,
@@ -446,7 +506,8 @@ def _masked_kernel_merge_from_w(
             )
             merged = states.replace(beta=beta, p=p)
 
-    keep = (mf > 0)[:, None, None]
+    kf = mf if receive is None else receive.astype(mf.dtype)
+    keep = (kf > 0)[:, None, None]
     return states.replace(
         beta=jnp.where(keep, merged.beta, states.beta),
         p=jnp.where(keep, merged.p, states.p),

@@ -21,6 +21,11 @@ from repro.kernels.ops import (
     uv_from_state_kernel,
 )
 from repro.kernels.quantize_pack import quantize_pack, quantize_pack_xla
+from repro.kernels.robust_merge import (
+    robust_segment_combine,
+    robust_segment_sum_mix,
+    robust_segment_sum_xla,
+)
 from repro.kernels.topology_merge import (
     banded_merge_solve,
     banded_mix,
@@ -40,6 +45,9 @@ __all__ = [
     "gla_forward",
     "quantize_pack",
     "quantize_pack_xla",
+    "robust_segment_combine",
+    "robust_segment_sum_mix",
+    "robust_segment_sum_xla",
     "hidden_proj",
     "matmul_atb",
     "oselm_step_k1_kernel",

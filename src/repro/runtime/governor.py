@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.federated.selection import FleetMaskFn
 from repro.fleet.comm import topology_round_cost
+from repro.fleet.robust import RobustConfig
 from repro.fleet.topology import Topology
 
 
@@ -83,12 +84,23 @@ class MergeGovernor:
         *,
         policies: tuple[FleetMaskFn, ...] = (),
         payload_precision: str = "f32",
+        robust: RobustConfig | None = None,
     ) -> None:
         self.topology = topology
         self.cfg = cfg
         self.policies = policies
         self.payload_precision = payload_precision
+        self.robust = robust
         self.state = GovernorState()
+        # robust-score quarantine ledger (active when ``robust`` is set):
+        # consecutive hot merge rounds escalate to quarantine, consecutive
+        # calm rounds while quarantined re-admit — hysteresis mirroring
+        # the drift detector's, but keyed on the contribution-outlier
+        # score (WHO is hostile) instead of the loss signal (who drifted)
+        d = topology.n_devices
+        self.robust_strikes = np.zeros(d, np.int64)
+        self.robust_calm = np.zeros(d, np.int64)
+        self.robust_quarantined = np.zeros(d, bool)
         self._full_round_bytes = topology_round_cost(
             topology, n_hidden, n_out
         ).bytes_total
@@ -97,11 +109,38 @@ class MergeGovernor:
         ).bytes_total
 
     def participation(self, drifted: np.ndarray, losses: np.ndarray) -> np.ndarray:
-        """Quarantine ∧ extra selection policies → (D,) 0/1 mask."""
+        """Quarantine ∧ robust quarantine ∧ extra selection policies →
+        (D,) 0/1 mask."""
         mask = ~np.asarray(drifted, bool)
+        if self.robust is not None:
+            mask &= ~self.robust_quarantined
         for policy in self.policies:
             mask &= np.asarray(policy(losses), bool)
         return mask
+
+    def observe_robust(self, scores: np.ndarray) -> None:
+        """Feed one merge round's contribution-outlier scores into the
+        strike/calm escalation ledger. Scores are computed for EVERY
+        device (quarantined devices keep publishing payloads that are
+        scored but never mixed), so a device that returns to normalcy
+        accrues calm rounds and is re-admitted after ``readmit_after``
+        of them — the hysteresis twin of ``escalate_after``."""
+        if self.robust is None:
+            return
+        cfg = self.robust
+        scores = np.asarray(scores, np.float64)
+        hot = scores > cfg.score_threshold
+        self.robust_strikes = np.where(hot, self.robust_strikes + 1, 0)
+        escalated = ~self.robust_quarantined & (
+            self.robust_strikes >= cfg.escalate_after
+        )
+        self.robust_quarantined |= escalated
+        self.robust_strikes[escalated] = 0
+        calm_now = self.robust_quarantined & (scores <= cfg.score_readmit)
+        self.robust_calm = np.where(calm_now, self.robust_calm + 1, 0)
+        released = self.robust_calm >= cfg.readmit_after
+        self.robust_quarantined &= ~released
+        self.robust_calm[released] = 0
 
     def round_bytes(self, participants: int, fp_participants: int = 0) -> int:
         """Round traffic with only ``participants`` of D devices live:

@@ -43,8 +43,10 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core import UV, OSELMState, ae_score
 from repro.federated.selection import FleetMaskFn
+from repro.fleet.faults import FaultInjector
 from repro.fleet.fleet import (
     _fleet_train,
+    _masked_kernel_merge_from_w,
     _masked_merge_body,
     _quantized_merge_body,
     fleet_from_uv,
@@ -52,6 +54,11 @@ from repro.fleet.fleet import (
     fleet_to_uv,
 )
 from repro.fleet.quantize import init_residual, validate_precision
+from repro.fleet.robust import (
+    RobustConfig,
+    finite_payload_mask,
+    robust_merge_from_w,
+)
 from repro.fleet.staleness import StalenessSchedule, _lagged_gather
 from repro.fleet.topology import Topology
 from repro.kernels.fleet_ingest import fleet_ingest
@@ -87,6 +94,11 @@ class RuntimeConfig:
     snapshot_every: int | None = None
     snapshot_dir: str | Path | None = None
     snapshot_keep: int = 3
+    robust: RobustConfig | None = None   # Byzantine-robust merge (clip/trim/score
+                                         # + governor quarantine escalation); None
+                                         # keeps the exact paper merge bit-for-bit
+    faults: FaultInjector | None = None  # deterministic fault injection at the
+                                         # payload boundary (repro.fleet.faults)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +111,9 @@ class TickReport:
     fresh_detections: np.ndarray  # (D,) flags that rose this tick
     decision: MergeDecision
     merge_seconds: float | None  # wall-clock of the admitted merge, else None
+    robust_scores: np.ndarray | None = None  # (D,) contribution-outlier scores
+                                             # of an admitted robust merge round
+    nonfinite_payloads: int = 0  # payloads rejected by the finite guard this tick
 
 
 class FleetRuntime:
@@ -125,6 +140,23 @@ class FleetRuntime:
                 "quantized payloads are not supported with the stale "
                 "published-version ring yet (the ring stores exact payloads)"
             )
+        hardened = config.robust is not None or config.faults is not None
+        if hardened and config.staleness is not None:
+            raise ValueError(
+                "robust/fault-injected merges are not supported with the "
+                "stale published-version ring (the ring replays un-guarded "
+                "historical payloads)"
+            )
+        if hardened and config.payload_precision != "f32":
+            raise ValueError(
+                "robust/fault-injected merges require payload_precision='f32' "
+                "(the quantized codec path has its own publish boundary)"
+            )
+        if config.faults is not None and config.faults.n_devices != n_devices:
+            raise ValueError(
+                f"fault injector is for {config.faults.n_devices} devices, "
+                f"fleet has {n_devices}"
+            )
         self.states = states
         self.config = config
         self.det = init_detector(n_devices)
@@ -134,6 +166,7 @@ class FleetRuntime:
         self.governor = MergeGovernor(
             config.topology, n_hidden, n_out, config.governor,
             policies=policies, payload_precision=config.payload_precision,
+            robust=config.robust,
         )
         self.tick_no = 0
         self.merge_round = 0
@@ -208,6 +241,58 @@ class FleetRuntime:
 
         self._merge_fresh = jax.jit(merge_fresh)
 
+        # ---- hardened merge boundary: faults in, robustness out ----
+        # One compile-once closure owns the whole payload boundary of an
+        # admitted round: extract w=[U|V], apply the tick's fault operands
+        # (mult/noise/nonfin — identity when no fault is active, so clean
+        # and attacked rounds share ONE trace), reject non-finite payloads
+        # (the device publishes its last finite (U, V) instead), then merge
+        # robustly (clip/trim/score) or naively (the degradation arm the
+        # benchmark measures).
+        self._merge_boundary = None
+        self._last_good = None
+        if hardened:
+            robust_cfg = config.robust
+            use_kernel = config.use_merge_kernel
+
+            def merge_boundary(fleet, mask, receive, mult, noise, nonfin, last_good):
+                uv = fleet_to_uv(fleet, ridge=ridge)
+                n = uv.u.shape[1]
+                w = jnp.concatenate([uv.u, uv.v], axis=2)
+                w = w * mult[:, None, None] + noise
+                w = jnp.where((nonfin == 1)[:, None, None], jnp.nan, w)
+                w = jnp.where((nonfin == 2)[:, None, None], jnp.inf, w)
+                finite = finite_payload_mask(w)
+                if robust_cfg is None:
+                    # naive arm: whatever the faults produced flows straight
+                    # into the plain masked Eq. 8 sum — the baseline the
+                    # robust arm is proven against
+                    if use_kernel:
+                        merged = _masked_kernel_merge_from_w(
+                            fleet, topology, mask, w, ridge, True
+                        )
+                    else:
+                        merged = _masked_merge_body(
+                            fleet, topology, mask, ridge,
+                            uv=UV(u=w[:, :, :n], v=w[:, :, n:]),
+                        )
+                    scores = jnp.zeros(mask.shape[0], jnp.float32)
+                    return merged, last_good, scores, finite
+                # finite-payload guard: a non-finite contribution is replaced
+                # by that device's last published finite payload, so one
+                # overflowing device never NaN-poisons the neighborhood sum
+                w_pub = jnp.where(finite[:, None, None], w, last_good)
+                new_last = jnp.where(finite[:, None, None], w, last_good)
+                merged, scores = robust_merge_from_w(
+                    fleet, topology, mask, w_pub, robust_cfg, ridge,
+                    kernel=use_kernel, interpret=True, receive=receive,
+                )
+                return merged, new_last, scores, finite
+
+            self._merge_boundary = jax.jit(merge_boundary)
+            uv0 = jax.jit(lambda s: fleet_to_uv(s, ridge=ridge))(states)
+            self._last_good = jnp.concatenate([uv0.u, uv0.v], axis=2)
+
         # ---- staleness-aware merge: published-payload version ring ----
         self._hist_u = self._hist_v = None
         if config.staleness is not None:
@@ -261,6 +346,11 @@ class FleetRuntime:
         """Process one serving tick: ingest + detect, then govern and
         (maybe) merge between ticks, then (maybe) snapshot."""
         t = self.tick_no
+        injector = self.config.faults
+        if injector is not None:
+            # data poisoning attacks through training itself, upstream of
+            # the payload boundary (host-side, before the jitted ingest)
+            batch = injector.poison_batch(np.asarray(batch), t)
         self.states, self.det, losses, drifted, fresh = self._ingest_detect(
             self.states, self.det, jnp.asarray(batch),
             jnp.asarray(self._post_merge), jnp.asarray(self._merge_mask),
@@ -275,6 +365,10 @@ class FleetRuntime:
             mask = self.governor.participation(drifted_np, losses_np)
         else:
             mask = np.ones(self.n_devices, bool)
+        if injector is not None:
+            # crashed devices are down for the window: no publish, no
+            # download — regardless of gating mode
+            mask = mask & ~injector.crash_mask(t)
         # detector-gated precision policy: on candidate rounds of a
         # quantized runtime, quarantine-risk devices are priced (and
         # shipped) at f32 — computed host-side from the post-update
@@ -288,10 +382,39 @@ class FleetRuntime:
         decision = self.governor.decide(t, mask, fp_mask)
 
         merge_seconds = None
+        robust_scores = None
+        nonfinite = 0
         if decision.merge:
             t0 = time.perf_counter()
             mask_j = jnp.asarray(mask, jnp.float32)
-            if self.config.staleness is not None:
+            if self._merge_boundary is not None:
+                shape = tuple(self._last_good.shape)
+                if injector is not None:
+                    mult, noise, nonfin = injector.payload_ops(t, shape)
+                else:
+                    mult = np.ones(shape[0], np.float32)
+                    noise = np.zeros(shape, np.float32)
+                    nonfin = np.zeros(shape[0], np.int32)
+                # robust-quarantined devices still DOWNLOAD the merged
+                # model (their payload is distrusted, they are not cut
+                # off) — unless drift-flagged or crashed this tick
+                receive = mask.astype(bool)
+                if self.config.robust is not None:
+                    rq = self.governor.robust_quarantined & ~drifted_np.astype(bool)
+                    if injector is not None:
+                        rq = rq & ~injector.crash_mask(t)
+                    receive = receive | rq
+                (self.states, self._last_good, scores_j, finite_j,
+                 ) = self._merge_boundary(
+                    self.states, mask_j, jnp.asarray(receive, jnp.float32),
+                    jnp.asarray(mult), jnp.asarray(noise),
+                    jnp.asarray(nonfin), self._last_good,
+                )
+                robust_scores = np.asarray(scores_j)
+                nonfinite = int((~np.asarray(finite_j)).sum())
+                if self.config.robust is not None:
+                    self.governor.observe_robust(robust_scores)
+            elif self.config.staleness is not None:
                 self.states, self._hist_u, self._hist_v = self._merge_stale(
                     self.states, self._hist_u, self._hist_v, mask_j,
                     jnp.int32(self.merge_round),
@@ -319,7 +442,8 @@ class FleetRuntime:
         return TickReport(
             tick=t, losses=losses_np, drifted=drifted_np,
             fresh_detections=fresh_np, decision=decision,
-            merge_seconds=merge_seconds,
+            merge_seconds=merge_seconds, robust_scores=robust_scores,
+            nonfinite_payloads=nonfinite,
         )
 
     def run(self, feed: TickFeed, *, ticks: int | None = None) -> list[TickReport]:
@@ -353,6 +477,13 @@ class FleetRuntime:
             tree["hist_v"] = self._hist_v
         if self._residual is not None:
             tree["residual"] = self._residual
+        if self._last_good is not None:
+            tree["last_good"] = self._last_good
+            tree["robust_gov"] = np.stack([
+                self.governor.robust_strikes,
+                self.governor.robust_calm,
+                self.governor.robust_quarantined.astype(np.int64),
+            ])
         return tree
 
     def snapshot(self) -> Path:
@@ -386,15 +517,24 @@ class FleetRuntime:
             self._hist_v = tree["hist_v"]
         if self._residual is not None:
             self._residual = tree["residual"]
+        if self._last_good is not None:
+            self._last_good = tree["last_good"]
+            rg = np.asarray(tree["robust_gov"])
+            self.governor.robust_strikes = rg[0].astype(np.int64)
+            self.governor.robust_calm = rg[1].astype(np.int64)
+            self.governor.robust_quarantined = rg[2].astype(bool)
         return self.tick_no
 
     # ---------------------------------------------------------- compile-once
 
     def jit_cache_sizes(self) -> dict[str, int]:
-        sizes = {
-            "ingest_detect": self._ingest_detect._cache_size(),
-            "merge_fresh": self._merge_fresh._cache_size(),
-        }
+        sizes = {"ingest_detect": self._ingest_detect._cache_size()}
+        if self._merge_boundary is not None:
+            # the hardened boundary owns all merges; _merge_fresh is never
+            # dispatched (its 0-entry cache would read as a false miss)
+            sizes["merge_boundary"] = self._merge_boundary._cache_size()
+        else:
+            sizes["merge_fresh"] = self._merge_fresh._cache_size()
         if self.config.staleness is not None:
             sizes["merge_stale"] = self._merge_stale._cache_size()
         return sizes

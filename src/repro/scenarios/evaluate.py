@@ -32,6 +32,7 @@ from repro.data.metrics import roc_auc
 from repro.data.pipeline import anomaly_eval_arrays
 from repro.data.synthetic import AnomalyDataset
 from repro.fleet.fleet import fleet_score, fleet_train
+from repro.fleet.robust import RobustConfig
 from repro.fleet.topology import Topology, make_topology
 from repro.runtime.governor import GovernorConfig
 from repro.runtime.runtime import FleetRuntime, RuntimeConfig, TickReport
@@ -69,10 +70,24 @@ def device_auc(
     return roc_auc(np.asarray(ae_score(state, jnp.asarray(x))), y)
 
 
-def fleet_aucs(states, x_eval: np.ndarray, y_eval: np.ndarray) -> np.ndarray:
-    """Per-device AUC of a stacked fleet on shared eval arrays: (D,)."""
+def fleet_aucs(
+    states, x_eval: np.ndarray, y_eval: np.ndarray, *, nonfinite: str = "strict"
+) -> np.ndarray:
+    """Per-device AUC of a stacked fleet on shared eval arrays: (D,).
+
+    ``nonfinite="coerce"`` scores a device whose model produces
+    non-finite outputs as 0.5 (an unusable detector is a coin flip) —
+    the honest way to chart how badly a NaN-poisoned naive merge
+    degrades without the chart itself crashing. The default stays
+    strict: clean paths treat non-finite scores as the bug they are."""
     scores = np.asarray(fleet_score(states, jnp.asarray(x_eval)))
-    return np.asarray([roc_auc(scores[d], y_eval) for d in range(scores.shape[0])])
+    out = []
+    for d in range(scores.shape[0]):
+        if nonfinite == "coerce" and not np.isfinite(scores[d]).all():
+            out.append(0.5)
+        else:
+            out.append(roc_auc(scores[d], y_eval))
+    return np.asarray(out)
 
 
 def bpnn_auc(
@@ -181,10 +196,15 @@ class ScenarioResult:
     reports: list[TickReport]
     jit_cache_sizes: dict[str, int]
     payload_precision: str = "f32"   # wire format the merges shipped at
+    robust: RobustConfig | None = None  # robust-merge config the run used
 
     @property
     def clean_devices(self) -> list[int]:
+        """Honest, non-drifted devices — the fleet whose AUC the locks
+        and the robustness claims are stated over (Byzantine devices'
+        own models are the attacker's problem)."""
         drifted = {ev.device for ev in self.spec.drift_schedule()}
+        drifted |= set(self.spec.fault_devices())
         return [d for d in range(self.spec.n_devices) if d not in drifted]
 
     def auc_summary(self) -> dict[str, float]:
@@ -225,6 +245,7 @@ def run_scenario(
     payload_precision: str = "f32",
     key_seed: int = 0,
     scenario=None,
+    robust: RobustConfig | str | None = "auto",
 ) -> ScenarioResult:
     """Drive one built scenario end-to-end through ``FleetRuntime``.
 
@@ -237,10 +258,19 @@ def run_scenario(
     ``scenario`` accepts the pre-built ``spec.build()`` so a topology
     grid shares one stream synthesis; the local baseline is likewise
     cached per (spec, key_seed) across topologies.
-    """
+
+    ``robust`` selects the merge's Byzantine defense: ``"auto"``
+    (default) enables a parameter-free trimmed merge exactly when the
+    spec carries fault schedules — clean presets keep the existing
+    bit-exact merge path and their golden locks; pass an explicit
+    ``RobustConfig`` to force it, or ``None`` to run fault-carrying
+    specs through the naive merge (the degradation baseline
+    ``benchmarks/robust_fleet.py`` measures)."""
     sc = spec.build() if scenario is None else scenario
     key = jax.random.PRNGKey(key_seed)
     topo = scenario_topology(topology, spec.n_devices, **(topology_kwargs or {}))
+    if robust == "auto":
+        robust = RobustConfig(trim=1) if spec.faults else None
     rt = FleetRuntime(
         sc.init_fleet(key),
         RuntimeConfig(
@@ -253,11 +283,16 @@ def run_scenario(
             use_ingest_kernel=use_ingest_kernel,
             ingest_backend=ingest_backend,
             payload_precision=payload_precision,
+            robust=robust,
+            faults=spec.fault_injector(),
         ),
     )
     feed = sc.feed()
     reports = rt.run(feed)
-    merged_aucs = fleet_aucs(rt.states, sc.x_eval, sc.y_eval)
+    merged_aucs = fleet_aucs(
+        rt.states, sc.x_eval, sc.y_eval,
+        nonfinite="coerce" if spec.faults else "strict",
+    )
     local_aucs = _local_aucs(sc, key, key_seed)
 
     return ScenarioResult(
@@ -271,4 +306,5 @@ def run_scenario(
         reports=reports,
         jit_cache_sizes=rt.assert_compile_once(),
         payload_precision=payload_precision,
+        robust=robust,
     )

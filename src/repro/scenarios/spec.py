@@ -49,6 +49,7 @@ from repro.data.pipeline import (
     train_test_split,
 )
 from repro.data.synthetic import DATASETS, AnomalyDataset, make_dataset
+from repro.fleet.faults import FaultInjector, FaultSpec
 from repro.fleet.partition import (
     DriftEvent,
     FleetStreams,
@@ -154,6 +155,11 @@ class ScenarioSpec:
     anomaly_ratio: float = 0.3                # eval positives / negatives
     train_frac: float = 0.8                   # §5.3.1 split
     seed: int = 0
+    # deterministic fault schedules (repro.fleet.faults) applied at the
+    # payload boundary — Byzantine payloads, crashes, poisoned streams.
+    # A tuple of frozen FaultSpecs keeps the spec hashable (the local-AUC
+    # cache and jit static args depend on that).
+    faults: tuple[FaultSpec, ...] = ()
 
     def __post_init__(self) -> None:
         if self.dataset not in DATASETS:
@@ -194,6 +200,17 @@ class ScenarioSpec:
             raise ValueError(f"need 0 < train_frac < 1, got {self.train_frac}")
         if not 0.0 < self.forget <= 1.0:
             raise ValueError(f"need 0 < forget <= 1, got {self.forget}")
+        for fs in self.faults:
+            if not isinstance(fs, FaultSpec):
+                raise ValueError(
+                    f"faults must be FaultSpec instances, got {type(fs).__name__}"
+                )
+            bad = [d for d in fs.devices if d >= self.n_devices]
+            if bad:
+                raise ValueError(
+                    f"fault devices {bad} out of range for a "
+                    f"{self.n_devices}-device scenario"
+                )
 
     # ------------------------------------------------------------ derived
 
@@ -231,6 +248,20 @@ class ScenarioSpec:
             home_classes=self.n_normal,
             targets=tuple(remap[t] for t in targets),
         )
+
+    def fault_injector(self) -> FaultInjector | None:
+        """The spec's resolved fault schedules (None when clean). Seeded
+        by the spec seed, so victim choice is part of the scenario's
+        reproducible identity."""
+        if not self.faults:
+            return None
+        return FaultInjector(self.faults, self.n_devices, seed=self.seed)
+
+    def fault_devices(self) -> tuple[int, ...]:
+        """Byzantine device ids (payload/poison victims) — excluded from
+        "honest fleet" AUC summaries the way drifted devices are."""
+        inj = self.fault_injector()
+        return () if inj is None else inj.byzantine_devices
 
     # -------------------------------------------------------------- build
 
@@ -320,10 +351,26 @@ def _mnist_spec() -> ScenarioSpec:
     )
 
 
+def _adversarial_spec() -> ScenarioSpec:
+    """Byzantine fleet: the HAR workload with 10% of devices mounting a
+    payload scale attack (×−25 — one such contribution swamps an honest
+    neighborhood's Eq. 8 sum under the naive merge). The evaluation path
+    auto-enables the robust merge for fault-carrying specs
+    (``run_scenario(robust="auto")``), so this preset runs green through
+    the same grid as the clean presets while ``benchmarks/robust_fleet``
+    measures the naive arm's degradation against it."""
+    return dataclasses.replace(
+        _har_spec(),
+        name="adversarial",
+        faults=(FaultSpec(kind="scale", frac=0.1, magnitude=-25.0, seed=7),),
+    )
+
+
 SCENARIOS: dict[str, Callable[[], ScenarioSpec]] = {
     "driving": _driving_spec,
     "har": _har_spec,
     "mnist_like": _mnist_spec,
+    "adversarial": _adversarial_spec,
 }
 
 

@@ -1,0 +1,524 @@
+"""Byzantine-robust merges, deterministic fault injection, and runtime
+hardening: kernel↔XLA parity of the trimmed segment sums, the trimmed
+estimator's breakdown property (≤ trim-budget adversaries cannot drag a
+coordinate outside the honest range), bit-for-bit equality with the
+plain masked merge when the defense is off (trim=0, no clip), the
+non-finite (U, V) guards, corrupt-checkpoint fallback, the governor's
+strike/calm quarantine hysteresis, and crash/restore tick-identity of
+the hardened runtime."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:  # property-based in CI; deterministic sweep where hypothesis is absent
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.checkpoint import CheckpointManager
+from repro.core import UV
+from repro.fleet import (
+    FaultInjector,
+    FaultSpec,
+    RobustConfig,
+    finite_payload_mask,
+    fleet_from_uv,
+    fleet_merge_masked,
+    fleet_merge_masked_kernel,
+    fleet_merge_robust,
+    fleet_to_uv,
+    hierarchical,
+    init_fleet,
+    payload_clip,
+    payload_outlier_scores,
+    ring,
+    star,
+)
+from repro.fleet.fleet import _solve_uv
+from repro.kernels import (
+    robust_segment_combine,
+    robust_segment_sum_mix,
+    robust_segment_sum_xla,
+)
+from repro.runtime import FleetRuntime, GovernorConfig, MergeGovernor, RuntimeConfig
+from repro.scenarios import SCENARIOS, make_scenario, run_scenario
+from repro.scenarios.evaluate import scenario_topology
+
+jax.config.update("jax_platform_name", "cpu")
+
+D, H, RIDGE = 8, 6, 1e-3
+
+
+def _fleet(seed=0, d=D, n=10, h=H):
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, 3 * h, n))
+    return init_fleet(key, d, n, h, x0, ridge=RIDGE)
+
+
+def _payload(fleet):
+    uv = fleet_to_uv(fleet, ridge=RIDGE)
+    return jnp.concatenate([uv.u, uv.v], axis=-1)
+
+
+# ------------------------------------------------ kernel ↔ XLA oracle parity
+
+
+@pytest.mark.parametrize("trim", [0, 1, 2])
+def test_robust_segment_sum_kernel_matches_xla(trim):
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(D, 4, 12)), jnp.float32)
+    cids = np.asarray([0, 0, 0, 1, 1, 1, 2, 2], np.int32)
+    mask = jnp.asarray([1, 1, 0, 1, 1, 1, 1, 1], jnp.float32)
+    scale = jnp.asarray(rng.uniform(0.2, 1.0, size=D), jnp.float32)
+    got = robust_segment_sum_mix(x, cids, mask, scale, 3, trim, interpret=True)
+    want = robust_segment_sum_xla(x, cids, mask, scale, 3, trim)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+    counts = jnp.asarray([2.0, 3.0, 2.0])
+    est = robust_segment_combine(*got, counts, trim)
+    assert np.isfinite(np.asarray(est)).all()
+    if trim == 0:
+        np.testing.assert_array_equal(np.asarray(est), np.asarray(got[0]))
+
+
+# --------------------------------------- trimmed-estimator breakdown bound
+
+
+def _check_trim_budget(seed: int, trim: int, n_adv: int, magnitude: float):
+    """≤ trim adversaries per segment cannot drag any coordinate of the
+    trimmed estimate outside the honest values' range (the classic
+    trimmed-mean breakdown bound, in Eq. 8 sum units)."""
+    n_adv = min(n_adv, trim)
+    rng = np.random.default_rng(seed)
+    d = 3 + 2 * trim + rng.integers(0, 4)  # enough survivors to trim
+    x = rng.normal(size=(d, 2, 6)).astype(np.float32)
+    adv = rng.choice(d, size=n_adv, replace=False)
+    x_adv = x.copy()
+    # adversaries push extremes in per-coordinate random directions
+    x_adv[adv] = magnitude * np.sign(rng.normal(size=(n_adv, 2, 6))).astype(
+        np.float32
+    )
+    cids = np.zeros(d, np.int32)
+    ones = jnp.ones(d, jnp.float32)
+    tot, lo, hi = robust_segment_sum_xla(
+        jnp.asarray(x_adv), cids, ones, ones, 1, trim
+    )
+    est = np.asarray(
+        robust_segment_combine(tot, lo, hi, jnp.asarray([float(d)]), trim)
+    )[0]
+    honest = np.delete(x, adv, axis=0)
+    # estimate is count × trimmed-mean — compare in mean units
+    mean_est = est / d
+    eps = 1e-4
+    assert (mean_est >= honest.min(axis=0) - eps).all()
+    assert (mean_est <= honest.max(axis=0) + eps).all()
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=2**31 - 1),
+        st.integers(min_value=1, max_value=2),
+        st.integers(min_value=0, max_value=2),
+        st.floats(min_value=10.0, max_value=1e6),
+    )
+    def test_trim_budget_breakdown_bound(seed, trim, n_adv, magnitude):
+        _check_trim_budget(seed, trim, n_adv, magnitude)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("trim,n_adv", [(1, 1), (2, 1), (2, 2), (1, 0)])
+    def test_trim_budget_breakdown_bound(seed, trim, n_adv):
+        _check_trim_budget(seed, trim, n_adv, magnitude=1e4)
+
+
+# ------------------------------------------- defense-off bit-for-bit parity
+
+
+@pytest.mark.parametrize("topo_fn", [
+    lambda: star(D),
+    lambda: ring(D, hops=1),
+    lambda: hierarchical(D, n_clusters=2),
+])
+def test_trim0_no_clip_is_bitexact_masked_merge(topo_fn):
+    """With the defense off (trim=0, clip=∞) the robust entry point is
+    the EXACT paper merge — same arrays, same summation order — on both
+    the XLA and the kernel path."""
+    fleet = _fleet()
+    topo = topo_fn()
+    mask = jnp.asarray([1, 1, 0, 1, 1, 1, 0, 1], jnp.float32)
+    cfg = RobustConfig(trim=0, clip_norm=None)
+    want = fleet_merge_masked(fleet, topo, mask, ridge=RIDGE)
+    got, scores = fleet_merge_robust(
+        fleet, topo, config=cfg, mask=mask, ridge=RIDGE
+    )
+    np.testing.assert_array_equal(np.asarray(got.beta), np.asarray(want.beta))
+    np.testing.assert_array_equal(np.asarray(got.p), np.asarray(want.p))
+    assert np.isfinite(np.asarray(scores)).all()
+
+    want_k = fleet_merge_masked_kernel(fleet, topo, mask, ridge=RIDGE)
+    got_k, _ = fleet_merge_robust(
+        fleet, topo, config=cfg, mask=mask, ridge=RIDGE, kernel=True
+    )
+    np.testing.assert_array_equal(np.asarray(got_k.beta), np.asarray(want_k.beta))
+    np.testing.assert_array_equal(np.asarray(got_k.p), np.asarray(want_k.p))
+
+
+# --------------------------------------------- end-to-end trimmed defense
+
+
+@pytest.mark.parametrize("topo_fn,kernel", [
+    (lambda: star(D), False),
+    (lambda: star(D), True),
+    (lambda: ring(D, hops=1), False),
+    (lambda: hierarchical(D, n_clusters=2), False),
+])
+def test_robust_merge_bounds_byzantine_influence(topo_fn, kernel):
+    """One ×−50 attacker: the trimmed merge stays finite and lands near
+    the clean merge, the naive merge is destroyed (non-finite solve or
+    dragged an order of magnitude further), and the attacker's
+    contribution-outlier score dominates every honest one. The fleet
+    uses large init chunks so the honest Grams concentrate — the regime
+    the trimmed-mean bound is about."""
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (D, 400, 10))
+    fleet = init_fleet(key, D, 10, H, x0, ridge=RIDGE)
+    topo = topo_fn()
+    mask = jnp.ones(D, jnp.float32)
+    w = _payload(fleet)
+    attacker = 2
+    w_adv = w.at[attacker].multiply(-50.0)
+    cfg = RobustConfig(trim=1)
+
+    from repro.fleet.robust import robust_merge_from_w
+
+    clean = fleet_merge_masked(fleet, topo, mask, ridge=RIDGE)
+    robust, scores = robust_merge_from_w(
+        fleet, topo, mask, w_adv, cfg, RIDGE, kernel=kernel
+    )
+    naive_uv = UV(u=w_adv[:, :, :H], v=w_adv[:, :, H:])
+    from repro.fleet.fleet import _masked_merge_body
+    naive = _masked_merge_body(fleet, topo, mask, RIDGE, uv=naive_uv)
+
+    honest = [d for d in range(D) if d != attacker]
+    rb, cb = np.asarray(robust.beta)[honest], np.asarray(clean.beta)[honest]
+    nb = np.asarray(naive.beta)[honest]
+    assert np.isfinite(np.asarray(robust.beta)).all()
+    assert np.isfinite(np.asarray(scores)).all()
+    robust_err = np.abs(rb - cb).max()
+    # the defense holds the honest merge well inside the clean betas'
+    # own scale...
+    assert robust_err < 0.5 * np.abs(cb).max(), robust_err
+    # ...while the naive Eq. 8 sum is destroyed by the same payload
+    naive_destroyed = (
+        not np.isfinite(nb).all() or np.abs(nb - cb).max() > 10.0 * robust_err
+    )
+    assert naive_destroyed
+    s = np.asarray(scores)
+    assert s[attacker] > 10.0 * max(s[h] for h in honest), s
+
+
+def test_payload_clip_and_outlier_scores():
+    fleet = _fleet()
+    w = _payload(fleet)
+    w_adv = w.at[5].multiply(1e4)
+    clipped, scale = payload_clip(w_adv, 10.0)
+    norms = np.linalg.norm(
+        np.asarray(clipped).reshape(D, -1), axis=1
+    )
+    assert (norms <= 10.0 + 1e-4).all()
+    assert scale is not None and float(np.asarray(scale)[5]) < 1e-2
+    passthrough, none_scale = payload_clip(w_adv, None)
+    assert passthrough is w_adv and none_scale is None
+
+    scores = np.asarray(payload_outlier_scores(w_adv, jnp.ones(D)))
+    assert scores[5] > 5.0 and np.isfinite(scores).all()
+
+    w_nan = w.at[1, 0, 0].set(jnp.nan).at[3, 0, 0].set(jnp.inf)
+    fin = np.asarray(finite_payload_mask(w_nan))
+    np.testing.assert_array_equal(
+        fin, [True, False, True, False, True, True, True, True]
+    )
+
+
+# ------------------------------------------------- deterministic faults
+
+
+def test_fault_injection_is_deterministic_and_windowed():
+    specs = (
+        FaultSpec(kind="scale", frac=0.25, magnitude=-25.0, seed=7),
+        FaultSpec(kind="noise", devices=(1,), magnitude=0.5,
+                  start_tick=4, end_tick=8, seed=2),
+        FaultSpec(kind="nan", devices=(5,), start_tick=6, period=2),
+        FaultSpec(kind="crash", devices=(0,), start_tick=3, end_tick=5),
+    )
+    a = FaultInjector(specs, D, seed=11)
+    b = FaultInjector(specs, D, seed=11)
+    shape = (D, 4, 6)
+    for t in range(10):
+        for ga, gb in zip(a.payload_ops(t, shape), b.payload_ops(t, shape)):
+            np.testing.assert_array_equal(ga, gb)
+        np.testing.assert_array_equal(a.crash_mask(t), b.crash_mask(t))
+
+    # windows honored: outside [4, 8) device 1's noise is exactly zero
+    _, noise_pre, _ = a.payload_ops(3, shape)
+    _, noise_in, _ = a.payload_ops(5, shape)
+    assert not noise_pre[1].any() and noise_in[1].any()
+    # nan schedule: start 6, period 2 → ticks 6, 8, ... only
+    for t, want in [(5, 0), (6, 1), (7, 0), (8, 1)]:
+        _, _, nonfin = a.payload_ops(t, shape)
+        assert nonfin[5] == want
+    # crash window [3, 5)
+    assert not a.crash_mask(2)[0]
+    assert a.crash_mask(3)[0] and a.crash_mask(4)[0]
+    assert not a.crash_mask(5)[0]
+    # crash victims are faulty, not Byzantine — payload attackers are
+    byz = a.byzantine_devices
+    assert 0 not in byz and 1 in byz and 5 in byz
+    # a seed change moves the frac-resolved victim set eventually;
+    # at minimum the resolution is itself deterministic
+    assert (
+        FaultInjector(specs, D, seed=11).byzantine_devices == byz
+    )
+
+    # clean tick returns the SAME batch object (no copy on the hot path)
+    batch = np.zeros((D, 2, 3), np.float32)
+    clean = FaultInjector(
+        (FaultSpec(kind="poison", devices=(2,), start_tick=5),), D
+    )
+    assert clean.poison_batch(batch, 0) is batch
+    poisoned = clean.poison_batch(batch, 5)
+    assert poisoned is not batch
+    assert poisoned[2].any() and not poisoned[0].any()
+    assert not batch[2].any()  # original untouched
+
+
+@pytest.mark.parametrize("bad", [
+    dict(kind="emp"),                                  # unknown kind
+    dict(kind="scale", devices=(1,), frac=0.5),        # both selectors
+    dict(kind="scale"),                                # neither selector
+    dict(kind="scale", frac=1.5),
+    dict(kind="scale", devices=(1,), period=0),
+    dict(kind="scale", devices=(1,), start_tick=8, end_tick=4),
+])
+def test_fault_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultSpec(**bad)
+
+
+def test_fault_injector_rejects_out_of_range_devices():
+    with pytest.raises(ValueError):
+        FaultInjector((FaultSpec(kind="scale", devices=(9,)),), 4)
+
+
+# ----------------------------------------------- non-finite (U, V) guards
+
+
+def test_fleet_from_uv_rejects_and_repairs_nonfinite():
+    fleet = _fleet()
+    uv = fleet_to_uv(fleet, ridge=RIDGE)
+    bad = UV(u=uv.u.at[1, 0, 0].set(jnp.nan),
+             v=uv.v.at[4, 0, 0].set(jnp.inf))
+    with pytest.raises(ValueError, match=r"\[1, 4\]"):
+        fleet_from_uv(fleet, bad, ridge=RIDGE)
+    repaired = fleet_from_uv(fleet, bad, ridge=RIDGE, nonfinite="repair")
+    assert np.isfinite(np.asarray(repaired.beta)).all()
+    assert np.isfinite(np.asarray(repaired.p)).all()
+    # repaired devices reset to (I, 0): zero detector output
+    np.testing.assert_allclose(np.asarray(repaired.beta[1]), 0.0)
+    # untouched devices keep the exact clean solve
+    clean = fleet_from_uv(fleet, uv, ridge=RIDGE)
+    np.testing.assert_array_equal(
+        np.asarray(repaired.beta[0]), np.asarray(clean.beta[0])
+    )
+    with pytest.raises(ValueError, match="nonfinite"):
+        fleet_from_uv(fleet, uv, ridge=RIDGE, nonfinite="ignore")
+
+
+def test_solve_uv_guard():
+    fleet = _fleet()
+    uv = fleet_to_uv(fleet, ridge=RIDGE)
+    with pytest.raises(ValueError, match="non-finite"):
+        _solve_uv(jnp.full((H, H), jnp.nan), uv.v[0], RIDGE)
+    p, beta = _solve_uv(
+        jnp.full((H, H), jnp.nan), uv.v[0], RIDGE, nonfinite="repair"
+    )
+    assert np.isfinite(np.asarray(p)).all()
+    assert np.isfinite(np.asarray(beta)).all()
+    # traced contexts skip the eager check instead of crashing the trace
+    jitted = jax.jit(lambda u, v: _solve_uv(u, v, RIDGE))
+    jp, _ = jitted(uv.u[0], uv.v[0])
+    assert np.isfinite(np.asarray(jp)).all()
+
+
+# ------------------------------------------- corrupt-checkpoint fallback
+
+
+def test_checkpoint_restore_falls_back_past_corrupt_latest(tmp_path, caplog):
+    cm = CheckpointManager(tmp_path, keep=4)
+    tree = {"a": np.arange(6, dtype=np.int64).reshape(2, 3)}
+    cm.save(1, tree)
+    cm.save(2, {"a": tree["a"] + 1})
+    latest = tmp_path / "ckpt_00000002.npz"
+    latest.write_bytes(latest.read_bytes()[:40])  # torn write
+    with caplog.at_level("WARNING"):
+        got, step = cm.restore(tree)
+    assert step == 1
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    assert "falling back" in caplog.text
+
+    # zero-byte snapshot falls through too
+    cm.save(3, tree)
+    (tmp_path / "ckpt_00000003.npz").write_bytes(b"")
+    _, step = cm.restore(tree)
+    assert step == 1
+
+    # an explicitly requested step still fails loudly
+    with pytest.raises(Exception):
+        cm.restore(tree, step=3)
+
+    # every candidate unreadable → FileNotFoundError, not a silent reset
+    (tmp_path / "ckpt_00000001.npz").write_bytes(b"junk")
+    with pytest.raises(FileNotFoundError, match="all unreadable"):
+        cm.restore(tree)
+
+
+# ------------------------------------- governor strike/calm hysteresis
+
+
+def test_governor_escalation_and_readmission():
+    cfg = RobustConfig(
+        trim=1, score_threshold=4.0, score_readmit=2.0,
+        escalate_after=2, readmit_after=3,
+    )
+    gov = MergeGovernor(star(4), H, 10, GovernorConfig(), robust=cfg)
+    hot = np.asarray([1.0, 9.0, 1.0, 1.0])
+    calm = np.asarray([1.0, 1.0, 1.0, 1.0])
+
+    gov.observe_robust(hot)          # strike 1 — not yet quarantined
+    assert not gov.robust_quarantined.any()
+    gov.observe_robust(hot)          # strike 2 → quarantine
+    assert gov.robust_quarantined.tolist() == [False, True, False, False]
+    # quarantined devices are masked out of participation
+    mask = gov.participation(np.zeros(4, bool), np.zeros(4))
+    assert mask.tolist() == [True, False, True, True]
+
+    # a single hot round among calm ones resets the calm counter
+    gov.observe_robust(calm)
+    gov.observe_robust(calm)
+    gov.observe_robust(hot)
+    assert gov.robust_quarantined[1]
+    # readmit_after consecutive calm rounds release the device
+    for _ in range(3):
+        assert gov.robust_quarantined[1]
+        gov.observe_robust(calm)
+    assert not gov.robust_quarantined.any()
+    # strikes must be consecutive: hot/calm alternation never escalates
+    gov2 = MergeGovernor(star(4), H, 10, GovernorConfig(), robust=cfg)
+    for _ in range(4):
+        gov2.observe_robust(hot)
+        gov2.observe_robust(calm)
+    assert not gov2.robust_quarantined.any()
+
+
+def test_robust_config_validation():
+    with pytest.raises(ValueError):
+        RobustConfig(trim=-1)
+    with pytest.raises(ValueError):
+        RobustConfig(clip_norm=0.0)
+    with pytest.raises(ValueError):
+        RobustConfig(score_threshold=1.0, score_readmit=2.0)
+    with pytest.raises(ValueError):
+        RobustConfig(escalate_after=0)
+
+
+# --------------------------------------------- hardened runtime end-to-end
+
+
+def _adversarial_spec(kind="scale", **kw):
+    fault = FaultSpec(kind=kind, devices=(1,), start_tick=8, seed=3, **kw)
+    return dataclasses.replace(
+        make_scenario("driving", n_devices=6, ticks=32), faults=(fault,)
+    )
+
+
+def test_runtime_rejects_nonfinite_payloads_and_scores_merges():
+    spec = _adversarial_spec(kind="nan")
+    res = run_scenario(spec, "star", merge_every=8)
+    assert res.robust is not None              # "auto" armed the defense
+    assert spec.fault_devices() == (1,)
+    rejected = sum(r.nonfinite_payloads for r in res.reports)
+    assert rejected > 0
+    merge_reports = [r for r in res.reports if r.decision.merge]
+    assert merge_reports and all(
+        r.robust_scores is not None for r in merge_reports
+    )
+    assert np.isfinite(res.merged_aucs).all()
+    assert all(v == 1 for v in res.jit_cache_sizes.values())
+
+
+def test_adversarial_preset_registered():
+    assert "adversarial" in SCENARIOS
+    spec = make_scenario("adversarial", n_devices=6, ticks=24)
+    assert spec.faults and spec.fault_devices()
+    # clean presets stay fault-free — their golden locks ride the exact
+    # bit-for-bit merge path
+    assert not make_scenario("har").faults
+
+
+def test_runtime_crash_restore_is_tick_identical(tmp_path):
+    """Kill the hardened runtime mid-soak, restore from the snapshot,
+    replay: reports and final state must match an uninterrupted run."""
+    spec = _adversarial_spec(kind="scale", magnitude=-25.0)
+    sc = spec.build()
+    key = jax.random.PRNGKey(0)
+    feed = sc.feed()
+    topo = scenario_topology("star", spec.n_devices)
+
+    def config(snap=False):
+        return RuntimeConfig(
+            topology=topo, ridge=spec.ridge, detector=spec.detector,
+            governor=GovernorConfig(merge_every=8),
+            robust=RobustConfig(trim=1), faults=spec.fault_injector(),
+            snapshot_every=8 if snap else None,
+            snapshot_dir=tmp_path if snap else None,
+        )
+
+    ref = FleetRuntime(sc.init_fleet(key), config())
+    ref_reports = ref.run(feed)
+
+    doomed = FleetRuntime(sc.init_fleet(key), config(snap=True))
+    doomed.run(feed, ticks=20)      # killed between snapshots
+    del doomed
+
+    revived = FleetRuntime(sc.init_fleet(key), config(snap=True))
+    t0 = revived.restore()
+    assert t0 == 16
+    replay = [revived.tick(feed.tick_batch(t)) for t in range(t0, spec.ticks)]
+
+    for r_ref, r_new in zip(ref_reports[t0:], replay):
+        np.testing.assert_allclose(
+            r_ref.losses, r_new.losses, rtol=0, atol=1e-6
+        )
+        np.testing.assert_array_equal(r_ref.drifted, r_new.drifted)
+        assert r_ref.decision.merge == r_new.decision.merge
+        assert r_ref.nonfinite_payloads == r_new.nonfinite_payloads
+        if r_ref.robust_scores is not None:
+            np.testing.assert_allclose(
+                r_ref.robust_scores, r_new.robust_scores, rtol=0, atol=1e-5
+            )
+    np.testing.assert_allclose(
+        np.asarray(ref.states.beta), np.asarray(revived.states.beta),
+        rtol=0, atol=1e-6,
+    )
+    np.testing.assert_array_equal(
+        ref.governor.robust_quarantined, revived.governor.robust_quarantined
+    )
+    revived.assert_compile_once()
