@@ -55,6 +55,7 @@ from benchmarks.history import record_and_gate
 from repro.baselines import bpnn3_config, run_fedavg, train_bpnn
 from repro.baselines.fedavg import FedAvgConfig
 from repro.fleet.comm import fedavg_total_cost
+from repro.obs import TelemetryConfig
 from repro.scenarios import SCENARIOS, bpnn_auc, make_scenario, run_scenario
 
 MERGE_EVERY = 16
@@ -106,8 +107,20 @@ def eval_scenario(
         res = run_scenario(
             spec, topo, merge_every=MERGE_EVERY, key_seed=seed, scenario=sc,
             payload_precision=payload_precision,
+            telemetry=TelemetryConfig(),
         )
         wall = time.perf_counter() - t0
+        # the sink's ledger must agree with the governor's: same bytes,
+        # same admitted rounds — one instrumentation surface, no forks
+        tel = res.telemetry
+        assert tel is not None and tel["bytes_total"] == res.comm_bytes, (
+            f"{name}/{topo}: telemetry bytes {tel and tel['bytes_total']} "
+            f"!= governor ledger {res.comm_bytes}"
+        )
+        assert tel["merge_rounds"] == res.merges, (
+            f"{name}/{topo}: telemetry rounds {tel['merge_rounds']} "
+            f"!= governor merges {res.merges}"
+        )
         det = res.detection
         rows[topo] = {
             **res.auc_summary(),
@@ -118,6 +131,8 @@ def eval_scenario(
             "missed_detections": len(det["missed"]),
             "false_positives": len(det["false_positives"]),
             "wall_seconds": wall,
+            "tick_p50_us": tel["tick_latency"]["p50_s"] * 1e6,
+            "tick_p99_us": tel["tick_latency"]["p99_s"] * 1e6,
         }
 
     # ---- BP-NN3 centralized baseline on the pooled normal-phase data

@@ -55,6 +55,7 @@ if __package__ in (None, ""):  # `python benchmarks/robust_fleet.py` from repo r
 from benchmarks.history import record_and_gate
 from repro.fleet.faults import FaultSpec
 from repro.fleet.robust import RobustConfig
+from repro.obs import TelemetryConfig
 from repro.runtime.governor import GovernorConfig
 from repro.runtime.runtime import FleetRuntime, RuntimeConfig
 from repro.scenarios import make_scenario, run_scenario, scenario_topology
@@ -112,15 +113,23 @@ def run_grid(grid: dict, *, seed: int = 0) -> dict:
                 arm_spec, topology, topology_kwargs=topo_kwargs or None,
                 merge_every=MERGE_EVERY, key_seed=seed,
                 scenario=sc, robust=robust,
+                telemetry=TelemetryConfig(),  # in-memory sink per arm
             )
             aucs[arm] = res.merged_aucs
+            tel = res.telemetry
+            rep_nonfinite = int(sum(r.nonfinite_payloads for r in res.reports))
+            # the sink's counters and the tick reports are two views of
+            # the SAME events — if they disagree, instrumentation lies
+            assert tel["nonfinite_payloads_total"] == rep_nonfinite, (
+                name, arm, tel["nonfinite_payloads_total"], rep_nonfinite,
+            )
+            assert tel["merge_rounds"] == res.merges, (name, arm, tel)
             arms[arm] = {
                 **res.auc_summary(),
                 "merges": res.merges,
                 "comm_bytes": res.comm_bytes,
-                "nonfinite_payloads": int(
-                    sum(r.nonfinite_payloads for r in res.reports)
-                ),
+                "nonfinite_payloads": rep_nonfinite,
+                "tick_p50_us": tel["tick_latency"]["p50_s"] * 1e6,
                 "wall_seconds": time.perf_counter() - t0,
             }
         honest = [
@@ -155,24 +164,30 @@ def chaos_recovery(*, seed: int = 0) -> dict:
     feed = sc.feed()
     ticks = spec.ticks
 
-    def config(snapshot_dir=None):
+    def config(snapshot_dir=None, telemetry_dir=None):
         return RuntimeConfig(
             topology=topo, ridge=spec.ridge, detector=spec.detector,
             governor=GovernorConfig(merge_every=MERGE_EVERY),
             robust=RobustConfig(trim=1), faults=spec.fault_injector(),
             snapshot_every=CHAOS_SNAPSHOT_EVERY if snapshot_dir else None,
             snapshot_dir=snapshot_dir,
+            telemetry=TelemetryConfig(dir=telemetry_dir),
         )
 
     t0 = time.perf_counter()
-    # uninterrupted reference
+    # uninterrupted reference (in-memory sink: the continuity baseline)
     ref = FleetRuntime(sc.init_fleet(key), config())
     ref_reports = ref.run(feed)
+    ref_summary = ref.finalize_telemetry()
 
     with tempfile.TemporaryDirectory() as tmp:
+        tel_dir = str(Path(tmp) / "telemetry")
         # the run that dies: killed between snapshots at CHAOS_KILL_TICK
-        doomed = FleetRuntime(sc.init_fleet(key), config(tmp))
+        doomed = FleetRuntime(sc.init_fleet(key), config(tmp, tel_dir))
         doomed.run(feed, ticks=CHAOS_KILL_TICK)
+        # NaN rounds before the kill must already have flight dumps
+        doomed_dumps = list(doomed.telemetry.flight.dumps)
+        assert doomed_dumps, "no flight dump before the crash"
         del doomed  # the "crash"
 
         # the crash also tore the newest snapshot — restore must warn
@@ -181,11 +196,16 @@ def chaos_recovery(*, seed: int = 0) -> dict:
         newest = snaps[-1]
         newest.write_bytes(newest.read_bytes()[:128])
 
-        revived = FleetRuntime(sc.init_fleet(key), config(tmp))
+        revived = FleetRuntime(sc.init_fleet(key), config(tmp, tel_dir))
         restored_tick = revived.restore()
+        # snapshots carry the registry + flight ring: the revived sink
+        # resumes mid-count instead of rebooting to zero
+        restored_ticks_counter = int(revived.telemetry.ticks.value)
         replay_reports = [
             revived.tick(feed.tick_batch(t)) for t in range(restored_tick, ticks)
         ]
+        revived_summary = revived.finalize_telemetry()
+        flight_dumps = [str(Path(p).name) for p in doomed_dumps]
     wall = time.perf_counter() - t0
 
     # the replayed tail must be indistinguishable from the reference
@@ -225,6 +245,16 @@ def chaos_recovery(*, seed: int = 0) -> dict:
         "tick_mismatches": mismatches,
         "final_beta_max_abs_err": beta_err,
         "jit_cache_sizes": revived.assert_compile_once(),
+        "restored_ticks_counter": restored_ticks_counter,
+        "flight_dumps_before_crash": flight_dumps,
+        "telemetry_continuity": {
+            "ref_ticks": ref_summary["ticks"],
+            "revived_ticks": revived_summary["ticks"],
+            "ref_nonfinite": ref_summary["nonfinite_payloads_total"],
+            "revived_nonfinite": revived_summary["nonfinite_payloads_total"],
+            "ref_merge_rounds": ref_summary["merge_rounds"],
+            "revived_merge_rounds": revived_summary["merge_rounds"],
+        },
         "wall_seconds": wall,
     }
 
@@ -311,6 +341,16 @@ def main(
     assert chaos["restored_tick"] < chaos["kill_tick"], (
         "restore did not rewind past the corrupted snapshot"
     )
+    # telemetry continuity: the restored registry resumed mid-count (not
+    # from zero) and the replayed run's final counters equal the
+    # uninterrupted reference's — kill/corrupt/restore is invisible in
+    # the metrics, exactly like it is in the model state
+    assert chaos["restored_ticks_counter"] == chaos["restored_tick"], chaos
+    cont = chaos["telemetry_continuity"]
+    assert cont["revived_ticks"] == cont["ref_ticks"], cont
+    assert cont["revived_nonfinite"] == cont["ref_nonfinite"], cont
+    assert cont["revived_merge_rounds"] == cont["ref_merge_rounds"], cont
+    assert chaos["flight_dumps_before_crash"], chaos
 
     lines.append(
         f"# robust_fleet claims ok — 10% Byzantine held to ±{AUC_BAND} on "

@@ -169,6 +169,16 @@ class FaultInjector:
                 nonfin[victims] = 2
         return mult, noise, nonfin
 
+    def active_faults(self, tick: int) -> list[tuple[str, int]]:
+        """``(kind, victim_count)`` of every schedule active this tick —
+        the telemetry layer's fault-event feed (counters + flight
+        records), shared with nothing stochastic: pure ``_active``."""
+        return [
+            (spec.kind, int(len(victims)))
+            for spec, victims in zip(self.specs, self._victims)
+            if self._active(spec, tick)
+        ]
+
     def crash_mask(self, tick: int) -> np.ndarray:
         """(D,) bool — devices down this tick (merge participation is
         withheld; local state persists until they rejoin)."""

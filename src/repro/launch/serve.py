@@ -9,12 +9,19 @@ meaningless), every round's features are scored exactly once against
 the current detector, and the EWMA/threshold detector turns the raw
 score trajectory into an explicit DETECTED flag.
 
+With ``--telemetry-dir`` the loop emits through a ``repro.obs``
+``TelemetrySink``: per-round latency/score series as spans in
+``trace.jsonl``, round counters and the drift gauge in
+``exposition.txt``, and a summary line at exit.
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --rounds 4 --batch 4 --prompt-len 64 --new-tokens 16
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import json
 import time
 
 import jax
@@ -23,6 +30,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import ae_score, ae_train_stream, init_autoencoder, oselm_step
 from repro.models import decode_step, encoder_forward, init_params, prefill
+from repro.obs import TelemetryConfig, TelemetrySink
 from repro.runtime import DetectorConfig, detector_update, init_detector
 
 
@@ -36,7 +44,30 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--drift-round", type=int, default=-1,
                     help="inject a shifted-distribution batch at this round")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="emit trace.jsonl/exposition.txt into this directory")
     args = ap.parse_args()
+
+    sink = (
+        TelemetrySink(TelemetryConfig(dir=args.telemetry_dir))
+        if args.telemetry_dir else None
+    )
+    if sink is not None:
+        rounds_total = sink.registry.counter(
+            "serve_rounds_total", "serving rounds completed"
+        )
+        round_seconds = sink.registry.histogram(
+            "serve_round_seconds", "wall-clock per serving round"
+        )
+        tokens_total = sink.registry.counter(
+            "serve_tokens_total", "tokens decoded"
+        )
+        drift_score = sink.registry.gauge(
+            "serve_drift_score", "monitor's latest mean ae_score"
+        )
+        drift_flags = sink.registry.counter(
+            "serve_drift_flags_total", "rounds the monitor flagged"
+        )
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -89,12 +120,19 @@ def main() -> None:
             prompts = (prompts * 31 + 17) % cfg.vocab
 
         t0 = time.time()
-        logits, caches, features = prefill_fn(params, prompts, fe)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        for i in range(args.new_tokens):
-            logits, caches = decode_fn(params, tok, caches, jnp.asarray(S + i, jnp.int32), enc_out)
+        span = (
+            sink.span("serve_round", round=rnd)
+            if sink is not None else contextlib.nullcontext()
+        )
+        with span:
+            logits, caches, features = prefill_fn(params, prompts, fe)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        jax.block_until_ready(tok)
+            for i in range(args.new_tokens):
+                logits, caches = decode_fn(
+                    params, tok, caches, jnp.asarray(S + i, jnp.int32), enc_out
+                )
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            jax.block_until_ready(tok)
         dt = time.time() - t0
 
         # single scoring site: every round (incl. round 0) is scored
@@ -104,6 +142,13 @@ def main() -> None:
             monitor, jnp.asarray([score]), mon_cfg
         )
         detector = oselm_step(detector, features, features)
+        if sink is not None:
+            rounds_total.inc()
+            round_seconds.observe(dt)
+            tokens_total.inc(B * args.new_tokens)
+            drift_score.set(score)
+            if bool(flagged[0]):
+                drift_flags.inc()
         flag = "  << DRIFT" if rnd == drift_round else ""
         if bool(flagged[0]):
             flag += "  [DETECTED]"
@@ -111,6 +156,15 @@ def main() -> None:
             f"round {rnd}: {B} reqs × {args.new_tokens} tok in {dt:.2f}s "
             f"({B*args.new_tokens/dt:.1f} tok/s) drift_score={score:.5f}{flag}"
         )
+
+    if sink is not None:
+        sink.close()
+        print("telemetry:", json.dumps({
+            "dir": args.telemetry_dir,
+            "rounds": int(rounds_total.value),
+            "tokens": int(tokens_total.value),
+            "drift_flags": int(drift_flags.value),
+        }))
 
 
 if __name__ == "__main__":

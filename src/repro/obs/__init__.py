@@ -1,0 +1,34 @@
+"""repro.obs — zero-dependency fleet telemetry.
+
+Structured metrics (``MetricsRegistry``: typed counters / gauges /
+histograms with labels, Prometheus-style text exposition), span tracing
+(``Tracer``: JSONL trace per run + optional ``jax.profiler``
+annotations), and a crash flight recorder (``FlightRecorder``: bounded
+ring of recent tick records, dumped to ``flight_<tick>.json`` on
+exception, non-finite payload rejection, or SLO breach). A
+``TelemetrySink`` composes the three behind the single export surface
+the runtime, the serving driver, and every benchmark consume.
+
+Everything is host-side Python updated between jitted calls — the
+compile-once tick loop stays compile-once with telemetry on, and the
+serve soak gates the overhead at ≤5% wall-clock.
+"""
+from repro.obs.flight import FlightRecorder, load_dump
+from repro.obs.metrics import (
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    phase_timer,
+)
+from repro.obs.sink import TICK_PHASES, TelemetryConfig, TelemetrySink
+from repro.obs.trace import Tracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "phase_timer",
+    "LATENCY_BUCKETS_S",
+    "Tracer",
+    "FlightRecorder", "load_dump",
+    "TelemetryConfig", "TelemetrySink", "TICK_PHASES",
+]

@@ -17,6 +17,13 @@ Merge payloads can ship quantized (``RuntimeConfig(payload_precision=
 still elevated) publish exact f32 payloads while stable devices
 publish the quantized format, and the governor's byte ledger blends
 the two per round.
+
+With ``RuntimeConfig(telemetry=TelemetryConfig(...))`` the whole tick
+loop emits through ``repro.obs``: per-phase fenced wall-clock
+histograms, merge bytes by wire precision, detector band dynamics, and
+a crash flight recorder whose ring dumps (with the failing tick's
+inputs) on exception, non-finite payload rejection, or SLO breach —
+all host-side, so the compile-once property is unchanged.
 """
 from repro.runtime.detector import (
     DetectorConfig,

@@ -153,6 +153,20 @@ class MergeGovernor:
         q = participants - fp
         return int((self._full_round_bytes * fp + self._q_round_bytes * q) / d)
 
+    def round_bytes_by_precision(
+        self, participants: int, fp_participants: int = 0
+    ) -> dict[str, int]:
+        """The same round traffic split by wire format — what the
+        telemetry byte counters record. Sums exactly to
+        ``round_bytes`` (the quantized share absorbs the int floor)."""
+        rb = self.round_bytes(participants, fp_participants)
+        if self.payload_precision == "f32":
+            return {"f32": rb}
+        d = max(self.topology.n_devices, 1)
+        fp = min(fp_participants, participants)
+        fp_part = min(rb, int(self._full_round_bytes * fp / d))
+        return {"f32": fp_part, self.payload_precision: rb - fp_part}
+
     def decide(
         self, tick: int, mask: np.ndarray, fp_mask: np.ndarray | None = None
     ) -> MergeDecision:

@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from pathlib import Path
 
 import jax
@@ -62,6 +63,7 @@ from repro.fleet.robust import (
 from repro.fleet.staleness import StalenessSchedule, _lagged_gather
 from repro.fleet.topology import Topology
 from repro.kernels.fleet_ingest import fleet_ingest
+from repro.obs import TelemetryConfig, TelemetrySink
 from repro.runtime.detector import (
     DetectorConfig,
     detector_update,
@@ -99,6 +101,12 @@ class RuntimeConfig:
                                          # keeps the exact paper merge bit-for-bit
     faults: FaultInjector | None = None  # deterministic fault injection at the
                                          # payload boundary (repro.fleet.faults)
+    telemetry: TelemetryConfig | None = None  # structured metrics + tracing +
+                                              # crash flight recorder (repro.obs);
+                                              # None = zero instrumentation
+    detections_cap: int = 4096  # detection-event ring length — the full ledger
+                                # of a months-long soak lives in the telemetry
+                                # counters/flight ring, not an unbounded list
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,10 +118,32 @@ class TickReport:
     drifted: np.ndarray         # (D,) quarantine flags after detection
     fresh_detections: np.ndarray  # (D,) flags that rose this tick
     decision: MergeDecision
-    merge_seconds: float | None  # wall-clock of the admitted merge, else None
+    merge_seconds: float | None  # wall-clock of the admitted merge (full output
+                                 # pytree fenced), else None
     robust_scores: np.ndarray | None = None  # (D,) contribution-outlier scores
                                              # of an admitted robust merge round
     nonfinite_payloads: int = 0  # payloads rejected by the finite guard this tick
+    ingest_seconds: float | None = None  # fenced wall-clock of ingest + detect
+
+
+class _NullPhase:
+    """Zero-cost stand-in for the telemetry phase timer — the same
+    ``with``/``fence`` surface, nothing measured. One shared instance
+    keeps the telemetry-off tick free of per-phase allocations."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullPhase":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def fence(self, tree) -> None:
+        pass
+
+
+_NULL_PHASE = _NullPhase()
 
 
 class FleetRuntime:
@@ -170,7 +200,19 @@ class FleetRuntime:
         )
         self.tick_no = 0
         self.merge_round = 0
-        self.detections: list[tuple[int, int]] = []   # (tick, device)
+        # bounded detection-event ring: recent (tick, device) flags for
+        # delay accounting; detections_total keeps the lifetime count a
+        # long soak would otherwise grow an unbounded list for
+        self.detections: deque[tuple[int, int]] = deque(
+            maxlen=config.detections_cap
+        )
+        self.detections_total = 0
+        self.telemetry = (
+            TelemetrySink(config.telemetry)
+            if config.telemetry is not None else None
+        )
+        self._tick_inputs: np.ndarray | None = None  # last post-poison batch,
+                                                     # carried for flight dumps
         self.ckpt = (
             CheckpointManager(config.snapshot_dir, keep=config.snapshot_keep)
             if config.snapshot_dir is not None else None
@@ -342,44 +384,85 @@ class FleetRuntime:
 
     # ------------------------------------------------------------- tick loop
 
+    def _phase(self, name: str):
+        """Phase timer context (a shared no-op when telemetry is off, so
+        the uninstrumented tick pays one attribute check per phase)."""
+        return _NULL_PHASE if self.telemetry is None else self.telemetry.phase(name)
+
+    def _observe_phase(self, name: str, seconds: float) -> None:
+        if self.telemetry is not None:
+            self.telemetry._phase_observe[name](seconds)
+
     def tick(self, batch: np.ndarray) -> TickReport:
         """Process one serving tick: ingest + detect, then govern and
-        (maybe) merge between ticks, then (maybe) snapshot."""
+        (maybe) merge between ticks, then (maybe) snapshot. With
+        telemetry configured an escaping exception dumps the flight
+        ring (plus this tick's input batch) before propagating."""
+        try:
+            return self._tick(batch)
+        except Exception:
+            tel = self.telemetry
+            if tel is not None:
+                tel.maybe_dump(
+                    self.tick_no, "exception", inputs=self._tick_inputs
+                )
+                tel.write_outputs()
+            raise
+
+    def _tick(self, batch: np.ndarray) -> TickReport:
         t = self.tick_no
         injector = self.config.faults
-        if injector is not None:
-            # data poisoning attacks through training itself, upstream of
-            # the payload boundary (host-side, before the jitted ingest)
-            batch = injector.poison_batch(np.asarray(batch), t)
+        t_start = time.perf_counter()
+        with self._phase("poison"):
+            if injector is not None:
+                # data poisoning attacks through training itself, upstream
+                # of the payload boundary (host-side, before jitted ingest)
+                batch = injector.poison_batch(np.asarray(batch), t)
+        # the post-poison batch is what reaches the model — the thing a
+        # flight dump must carry for the failing tick to be replayable
+        self._tick_inputs = batch
+
+        t0 = time.perf_counter()
         self.states, self.det, losses, drifted, fresh = self._ingest_detect(
             self.states, self.det, jnp.asarray(batch),
             jnp.asarray(self._post_merge), jnp.asarray(self._merge_mask),
         )
+        jax.block_until_ready((self.states, self.det, losses))
+        ingest_seconds = time.perf_counter() - t0
+        self._observe_phase("ingest", ingest_seconds)
+
         losses_np = np.asarray(losses)
         drifted_np = np.asarray(drifted)
         fresh_np = np.asarray(fresh)
+        n_fresh = int(fresh_np.sum())
+        self.detections_total += n_fresh
         for dev in np.flatnonzero(fresh_np):
             self.detections.append((t, int(dev)))
 
-        if self.config.gate_merges:
-            mask = self.governor.participation(drifted_np, losses_np)
-        else:
-            mask = np.ones(self.n_devices, bool)
-        if injector is not None:
-            # crashed devices are down for the window: no publish, no
-            # download — regardless of gating mode
-            mask = mask & ~injector.crash_mask(t)
         # detector-gated precision policy: on candidate rounds of a
         # quantized runtime, quarantine-risk devices are priced (and
         # shipped) at f32 — computed host-side from the post-update
         # detector state, like the participation mask
-        fp_mask = None
-        if (
-            self._residual is not None
-            and (t + 1) % self.config.governor.merge_every == 0
-        ):
-            fp_mask = np.asarray(quarantine_risk(self.det, self.config.detector))
-        decision = self.governor.decide(t, mask, fp_mask)
+        with self._phase("quantize"):
+            fp_mask = None
+            if (
+                self._residual is not None
+                and (t + 1) % self.config.governor.merge_every == 0
+            ):
+                fp_mask = np.asarray(
+                    quarantine_risk(self.det, self.config.detector)
+                )
+
+        with self._phase("govern"):
+            if self.config.gate_merges:
+                mask = self.governor.participation(drifted_np, losses_np)
+            else:
+                mask = np.ones(self.n_devices, bool)
+            if injector is not None:
+                # crashed devices are down for the window: no publish, no
+                # download — regardless of gating mode
+                mask = mask & ~injector.crash_mask(t)
+            decision = self.governor.decide(t, mask, fp_mask)
 
         merge_seconds = None
         robust_scores = None
@@ -410,24 +493,44 @@ class FleetRuntime:
                     jnp.asarray(mult), jnp.asarray(noise),
                     jnp.asarray(nonfin), self._last_good,
                 )
-                robust_scores = np.asarray(scores_j)
-                nonfinite = int((~np.asarray(finite_j)).sum())
-                if self.config.robust is not None:
-                    self.governor.observe_robust(robust_scores)
+                fence = (self.states, self._last_good, scores_j, finite_j)
             elif self.config.staleness is not None:
                 self.states, self._hist_u, self._hist_v = self._merge_stale(
                     self.states, self._hist_u, self._hist_v, mask_j,
                     jnp.int32(self.merge_round),
                 )
+                fence = (self.states, self._hist_u, self._hist_v)
             elif self._residual is not None:
                 self.states, self._residual = self._merge_fresh(
                     self.states, mask_j, jnp.asarray(fp_mask), self._residual
                 )
+                fence = (self.states, self._residual)
             else:
                 self.states = self._merge_fresh(self.states, mask_j)
-            jax.block_until_ready(self.states.beta)
+                fence = self.states
+            # fence the FULL output pytree, not just states.beta — async
+            # dispatch would otherwise bill unfinished ring/residual/score
+            # work to whichever later phase synchronizes first
+            jax.block_until_ready(fence)
             merge_seconds = time.perf_counter() - t0
+            self._observe_phase("merge", merge_seconds)
+            if self._merge_boundary is not None:
+                robust_scores = np.asarray(scores_j)
+                nonfinite = int((~np.asarray(finite_j)).sum())
+                if self.config.robust is not None:
+                    self.governor.observe_robust(robust_scores)
             self.merge_round += 1
+
+        # serving latency of THIS tick: ingest through merge; snapshots
+        # amortize across the snapshot_every window and are timed as
+        # their own phase below rather than folded into tick_seconds
+        tick_seconds = time.perf_counter() - t_start
+        if self.telemetry is not None:
+            self._record_telemetry(
+                t, batch, losses_np, drifted_np, fresh_np, n_fresh, decision,
+                ingest_seconds, merge_seconds, tick_seconds,
+                robust_scores, nonfinite,
+            )
 
         self._post_merge = decision.merge
         if decision.merge:
@@ -438,13 +541,130 @@ class FleetRuntime:
             and self.config.snapshot_every
             and self.tick_no % self.config.snapshot_every == 0
         ):
-            self.snapshot()
+            with self._phase("snapshot"):
+                self.snapshot()
         return TickReport(
             tick=t, losses=losses_np, drifted=drifted_np,
             fresh_detections=fresh_np, decision=decision,
             merge_seconds=merge_seconds, robust_scores=robust_scores,
-            nonfinite_payloads=nonfinite,
+            nonfinite_payloads=nonfinite, ingest_seconds=ingest_seconds,
         )
+
+    def _record_telemetry(
+        self, t: int, batch, losses: np.ndarray, drifted: np.ndarray,
+        fresh: np.ndarray, n_fresh: int, decision: MergeDecision,
+        ingest_seconds: float, merge_seconds: float | None,
+        tick_seconds: float, robust_scores: np.ndarray | None, nonfinite: int,
+    ) -> None:
+        """Fold one tick into the sink: counters/gauges/histograms, the
+        flight-ring record, and the nonfinite/SLO dump triggers."""
+        tel = self.telemetry
+        cfg = self.config
+        tel.ticks.inc()
+        tel.tick_seconds.observe(tick_seconds)
+        if n_fresh:
+            tel.detections.inc(n_fresh)
+        injector = cfg.faults
+        faults = injector.active_faults(t) if injector is not None else []
+        for kind, n in faults:
+            tel.fault_events.labels(kind=kind).inc(n)
+        n_quarantined = int(drifted.sum())
+        tel.quarantined.set(n_quarantined)
+        if cfg.robust is not None:
+            tel.robust_quarantined.set(
+                int(self.governor.robust_quarantined.sum())
+            )
+
+        # detector band dynamics over calibrated devices, in host numpy
+        # (mirrors detector._sigma — the band the flags fire against);
+        # sampled every band_sample_every ticks: the three detector-state
+        # device reads per observation are the costliest line in the
+        # telemetry path and the band moves slowly
+        det_cfg = cfg.detector
+        if t % tel.config.band_sample_every == 0:
+            calibrated = np.asarray(self.det.count) >= det_cfg.warmup
+            if calibrated.any():
+                mean = np.asarray(self.det.mean)
+                sigma = np.maximum(
+                    np.sqrt(np.maximum(np.asarray(self.det.var), 0.0))
+                    + det_cfg.min_sigma,
+                    det_cfg.rel_sigma * mean,
+                )
+                tel.band_width.observe_many(det_cfg.k_sigma * sigma[calibrated])
+                tel.loss_ratio.observe_many(
+                    losses[calibrated]
+                    / np.maximum(mean[calibrated], det_cfg.min_sigma)
+                )
+
+        if decision.merge:
+            tel.merge_rounds.inc()
+            split = self.governor.round_bytes_by_precision(
+                decision.participants, decision.fp_participants
+            )
+            for precision, nbytes in split.items():
+                tel.merge_bytes.labels(precision=precision).inc(nbytes)
+            if self._residual is not None:
+                tel.ef_residual_norm.set(float(jnp.sqrt(sum(
+                    jnp.sum(jnp.square(leaf))
+                    for leaf in jax.tree_util.tree_leaves(self._residual)
+                ))))
+        if nonfinite:
+            tel.nonfinite.inc(nonfinite)
+
+        rec = {
+            "tick": t,
+            "loss_mean": float(losses.mean()),
+            "loss_max": float(losses.max()),
+            "quarantined": n_quarantined,
+            "fresh": np.flatnonzero(fresh).tolist() if n_fresh else [],
+            "decision": {
+                "merge": decision.merge, "reason": decision.reason,
+                "participants": decision.participants,
+                "round_bytes": decision.round_bytes,
+                "fp_participants": decision.fp_participants,
+            },
+            "ingest_seconds": ingest_seconds,
+            "merge_seconds": merge_seconds,
+            "tick_seconds": tick_seconds,
+            "nonfinite_payloads": nonfinite,
+        }
+        if losses.shape[0] <= 512:
+            # small fleets: full loss vector + quarantine set, the replay
+            # probe's comparison surface; large fleets keep the ring lean
+            # (tolist() already widens f32 to exact Python floats)
+            rec["losses"] = losses.tolist()
+            rec["drifted"] = (
+                np.flatnonzero(drifted).tolist() if n_quarantined else []
+            )
+        if faults:
+            rec["faults"] = faults
+        if robust_scores is not None and robust_scores.size:
+            top = np.argsort(robust_scores)[::-1][:5]
+            rec["robust_outliers"] = [
+                (int(d), float(robust_scores[d])) for d in top
+            ]
+        tel.flight.record(rec)
+
+        if nonfinite:
+            tel.maybe_dump(
+                t, "nonfinite", inputs=batch,
+                extra={"nonfinite_payloads": nonfinite},
+            )
+        slo = tel.config.slo_tick_seconds
+        if slo is not None and tick_seconds > slo:
+            tel.slo_breaches.inc()
+            tel.maybe_dump(
+                t, "slo", inputs=batch,
+                extra={"tick_seconds": tick_seconds, "slo_seconds": slo},
+            )
+
+    def finalize_telemetry(self) -> dict | None:
+        """Flush the sink's outputs (trace + exposition, dir mode) and
+        return the end-of-run summary; None when telemetry is off."""
+        if self.telemetry is None:
+            return None
+        self.telemetry.close()
+        return self.telemetry.summary()
 
     def run(self, feed: TickFeed, *, ticks: int | None = None) -> list[TickReport]:
         """Drive the runtime over a feed (all of it by default)."""
@@ -466,12 +686,22 @@ class FleetRuntime:
                  self.governor.state.deferred_budget,
                  self.governor.state.deferred_participants], np.int64,
             ),
-            # (N, 2) detection ledger; restored whole (shape may differ
-            # from the template's — the numpy restore path allows that)
+            # (N, 2) detection-event ring; restored whole (shape may
+            # differ from the template's — the numpy path allows that)
             "detections": np.asarray(self.detections, np.int64).reshape(-1, 2),
+            "detections_total": np.asarray(self.detections_total, np.int64),
             "post_merge": np.asarray(self._post_merge, np.int32),
             "merge_mask": np.asarray(self._merge_mask, np.int32),
         }
+        if self.telemetry is not None:
+            # registry counters + flight ring as a JSON blob in a uint8
+            # leaf: npz round-trips bytes exactly, and the variable
+            # length rides the same shape-free numpy restore path the
+            # detection ledger uses — so a kill/restore resumes with
+            # CONTINUOUS metrics instead of a zeroed registry
+            tree["telemetry"] = np.frombuffer(
+                self.telemetry.state_bytes(), np.uint8
+            )
         if self._hist_u is not None:
             tree["hist_u"] = self._hist_u
             tree["hist_v"] = self._hist_v
@@ -507,9 +737,15 @@ class FleetRuntime:
         self.governor.state.bytes_spent = int(gov[2])
         self.governor.state.deferred_budget = int(gov[3])
         self.governor.state.deferred_participants = int(gov[4])
-        self.detections = [
-            (int(t), int(d)) for t, d in np.asarray(tree["detections"])
-        ]
+        self.detections = deque(
+            ((int(t), int(d)) for t, d in np.asarray(tree["detections"])),
+            maxlen=self.config.detections_cap,
+        )
+        self.detections_total = int(tree["detections_total"])
+        if self.telemetry is not None:
+            self.telemetry.load_state_bytes(
+                np.asarray(tree["telemetry"], np.uint8).tobytes()
+            )
         self._post_merge = bool(int(tree["post_merge"]))
         self._merge_mask = np.asarray(tree["merge_mask"]).astype(bool)
         if self._hist_u is not None:

@@ -34,6 +34,7 @@ from repro.data.synthetic import AnomalyDataset
 from repro.fleet.fleet import fleet_score, fleet_train
 from repro.fleet.robust import RobustConfig
 from repro.fleet.topology import Topology, make_topology
+from repro.obs import TelemetryConfig
 from repro.runtime.governor import GovernorConfig
 from repro.runtime.runtime import FleetRuntime, RuntimeConfig, TickReport
 from repro.scenarios.spec import ScenarioSpec
@@ -197,6 +198,8 @@ class ScenarioResult:
     jit_cache_sizes: dict[str, int]
     payload_precision: str = "f32"   # wire format the merges shipped at
     robust: RobustConfig | None = None  # robust-merge config the run used
+    telemetry: dict | None = None    # TelemetrySink.summary() of the run
+                                     # (None when telemetry was off)
 
     @property
     def clean_devices(self) -> list[int]:
@@ -246,6 +249,7 @@ def run_scenario(
     key_seed: int = 0,
     scenario=None,
     robust: RobustConfig | str | None = "auto",
+    telemetry: TelemetryConfig | None = None,
 ) -> ScenarioResult:
     """Drive one built scenario end-to-end through ``FleetRuntime``.
 
@@ -265,7 +269,12 @@ def run_scenario(
     bit-exact merge path and their golden locks; pass an explicit
     ``RobustConfig`` to force it, or ``None`` to run fault-carrying
     specs through the naive merge (the degradation baseline
-    ``benchmarks/robust_fleet.py`` measures)."""
+    ``benchmarks/robust_fleet.py`` measures).
+
+    ``telemetry`` threads a ``repro.obs.TelemetryConfig`` into the
+    runtime; the finalized ``TelemetrySink.summary()`` rides back on
+    ``ScenarioResult.telemetry`` so benchmarks can cross-check their
+    ledger-derived numbers against the instrumented ones."""
     sc = spec.build() if scenario is None else scenario
     key = jax.random.PRNGKey(key_seed)
     topo = scenario_topology(topology, spec.n_devices, **(topology_kwargs or {}))
@@ -285,6 +294,7 @@ def run_scenario(
             payload_precision=payload_precision,
             robust=robust,
             faults=spec.fault_injector(),
+            telemetry=telemetry,
         ),
     )
     feed = sc.feed()
@@ -307,4 +317,5 @@ def run_scenario(
         jit_cache_sizes=rt.assert_compile_once(),
         payload_precision=payload_precision,
         robust=robust,
+        telemetry=rt.finalize_telemetry(),
     )

@@ -1,0 +1,393 @@
+"""Telemetry subsystem tests: histogram bucket semantics, counter
+monotonicity (including across snapshot/restore), registry exposition
+and state round-trips, span tracing, the flight-recorder ring, and the
+runtime integration — compile-once with the sink on, flight dumps on
+injected NaN payloads, and the bounded detections log."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_har_dataset
+from repro.data.pipeline import anomaly_eval_arrays, train_test_split
+from repro.data.synthetic import AnomalyDataset
+from repro.fleet import DriftEvent, init_fleet, make_fleet_streams, ring
+from repro.fleet.faults import FaultInjector, FaultSpec
+from repro.fleet.robust import RobustConfig
+from repro.obs import (
+    Counter,
+    FlightRecorder,
+    Histogram,
+    MetricsRegistry,
+    TelemetryConfig,
+    TelemetrySink,
+    Tracer,
+    load_dump,
+    phase_timer,
+)
+from repro.runtime import (
+    DetectorConfig,
+    FleetRuntime,
+    GovernorConfig,
+    RuntimeConfig,
+    TickFeed,
+)
+
+RIDGE = 1e-3
+H_RT = 16
+
+# ------------------------------------------------------------------- metrics
+
+
+def test_counter_monotone():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    assert c.value == 3.5
+
+
+def test_histogram_bucket_edges_are_inclusive_upper_bounds():
+    h = Histogram(buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.0, 1.5, 2.0, 4.0, 100.0):
+        h.observe(v)
+    # le semantics: a value equal to an edge lands in that edge's bucket
+    assert h.counts == [2, 2, 1, 1]  # le=1, le=2, le=4, +Inf
+    assert h.count == 6
+    assert h.vmin == 0.5 and h.vmax == 100.0
+    assert h.sum == pytest.approx(109.0)
+
+
+def test_histogram_rejects_bad_edges():
+    with pytest.raises(ValueError):
+        Histogram(buckets=())
+    with pytest.raises(ValueError):
+        Histogram(buckets=(1.0, 1.0, 2.0))
+    with pytest.raises(ValueError):
+        Histogram(buckets=(2.0, 1.0))
+
+
+def test_histogram_observe_many_matches_sequential_observe():
+    rng = np.random.default_rng(0)
+    values = rng.gamma(1.0, 2.0, size=257)
+    one = Histogram(buckets=(0.5, 1.0, 2.0, 8.0), sample_cap=100)
+    many = Histogram(buckets=(0.5, 1.0, 2.0, 8.0), sample_cap=100)
+    for v in values:
+        one.observe(v)
+    many.observe_many(values)
+    assert one.counts == many.counts
+    assert one.count == many.count
+    assert one.sum == pytest.approx(many.sum)
+    assert list(one.samples) == pytest.approx(list(many.samples))
+    assert one.quantile(0.5) == pytest.approx(many.quantile(0.5))
+
+
+def test_histogram_sample_window_is_bounded():
+    h = Histogram(buckets=(1.0,), sample_cap=8)
+    h.observe_many(np.arange(100, dtype=np.float64))
+    assert len(h.samples) == 8
+    assert list(h.samples) == list(range(92, 100))  # most recent retained
+    assert h.count == 100  # aggregate stats still see everything
+
+
+def test_registry_labels_and_redeclare():
+    r = MetricsRegistry()
+    fam = r.counter("merge_bytes_total", labels=("precision",))
+    fam.labels(precision="f32").inc(100)
+    fam.labels(precision="int8").inc(25)
+    assert fam.labels(precision="f32").value == 100
+    # same (name, kind, labels) → the same object
+    assert r.counter("merge_bytes_total", labels=("precision",)) is fam
+    with pytest.raises(ValueError):
+        r.gauge("merge_bytes_total")  # one name, one meaning
+    with pytest.raises(ValueError):
+        fam.labels(wrong="x")
+    with pytest.raises(ValueError):
+        r.counter("bad name!")
+
+
+def test_registry_exposition_well_formed():
+    r = MetricsRegistry()
+    r.counter("ticks_total", "ticks").inc(5)
+    r.gauge("quarantined_devices").set(2)
+    h = r.histogram("lat_seconds", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(10.0)
+    text = r.exposition()
+    assert "# TYPE ticks_total counter" in text
+    assert "ticks_total 5" in text
+    assert "# TYPE quarantined_devices gauge" in text
+    assert "# TYPE lat_seconds histogram" in text
+    # buckets are CUMULATIVE and +Inf equals the total count
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 3' in text
+    assert "lat_seconds_count 3" in text
+
+
+def test_registry_state_roundtrip():
+    r = MetricsRegistry()
+    r.counter("ticks_total").inc(7)
+    r.gauge("level").set(-1.5)
+    fam = r.counter("bytes_total", labels=("precision",))
+    fam.labels(precision="f32").inc(64)
+    h = r.histogram("lat", buckets=(1.0, 2.0))
+    h.observe_many([0.5, 1.5, 9.0])
+
+    state = json.loads(json.dumps(r.state()))  # must survive JSON
+
+    r2 = MetricsRegistry()
+    r2.counter("ticks_total")
+    r2.gauge("level")
+    r2.counter("bytes_total", labels=("precision",))
+    r2.histogram("lat", buckets=(1.0, 2.0))
+    r2.load_state(state)
+    assert r2.counter("ticks_total").value == 7
+    assert r2.gauge("level").value == -1.5
+    assert r2.counter(
+        "bytes_total", labels=("precision",)
+    ).labels(precision="f32").value == 64
+    h2 = r2.histogram("lat", buckets=(1.0, 2.0))
+    assert h2.counts == h.counts and h2.count == 3
+    assert h2.quantile(0.5) == h.quantile(0.5)
+
+
+def test_registry_load_rejects_bucket_mismatch():
+    r = MetricsRegistry()
+    r.histogram("lat", buckets=(1.0, 2.0)).observe(0.5)
+    state = r.state()
+    r2 = MetricsRegistry()
+    r2.histogram("lat", buckets=(1.0, 4.0))
+    with pytest.raises(ValueError):
+        r2.load_state(state)
+
+
+def test_phase_timer_fences_device_work():
+    seen = []
+    with phase_timer(seen.append) as handle:
+        x = jax.numpy.ones((256, 256)) @ jax.numpy.ones((256, 256))
+        handle.fence(x)
+    assert len(seen) == 1 and seen[0] > 0
+    # fencing nothing still observes
+    with phase_timer(seen.append):
+        pass
+    assert len(seen) == 2
+
+
+# --------------------------------------------------------------------- trace
+
+
+def test_tracer_writes_parseable_jsonl(tmp_path):
+    path = tmp_path / "trace.jsonl"
+    tr = Tracer(path)
+    with tr.span("merge", tick=3):
+        pass
+    tr.emit({"name": "flight_dump", "tick": 3})
+    tr.close()
+    events = [json.loads(line) for line in path.read_text().splitlines()]
+    assert [e["name"] for e in events] == ["merge", "flight_dump"]
+    assert events[0]["tick"] == 3
+    assert events[0]["dur_s"] >= 0
+    assert tr.events_emitted == 2
+
+
+def test_tracer_disabled_is_noop(tmp_path):
+    tr = Tracer(None)
+    assert not tr.enabled
+    with tr.span("x"):
+        pass
+    assert tr.events_emitted == 0
+
+
+# -------------------------------------------------------------------- flight
+
+
+def test_flight_ring_bounded():
+    fr = FlightRecorder(capacity=4)
+    for t in range(10):
+        fr.record({"tick": t})
+    assert len(fr) == 4
+    assert fr.records_total == 10
+    assert [r["tick"] for r in fr.records()] == [6, 7, 8, 9]
+
+
+def test_flight_dump_roundtrip_and_rate_limit(tmp_path):
+    fr = FlightRecorder(capacity=8, max_dumps=2)
+    # records may carry numpy leaves; the dump must still serialize
+    fr.record({"tick": 0, "losses": np.asarray([1.0, 2.0], np.float32),
+               "n": np.int64(3)})
+    inputs = np.arange(12, dtype=np.float32).reshape(2, 2, 3)
+    path = fr.dump(tmp_path, 0, "nonfinite", inputs=inputs,
+                   extra={"count": np.int32(2)})
+    assert path is not None
+    dump = load_dump(path)
+    assert dump["reason"] == "nonfinite"
+    assert dump["ring"][0]["losses"] == [1.0, 2.0]
+    assert dump["extra"]["count"] == 2
+    np.testing.assert_array_equal(dump["inputs"], inputs)
+    assert dump["inputs"].dtype == np.float32
+
+    assert fr.dump(tmp_path, 1, "nonfinite") is not None  # budget: 2
+    assert fr.dump(tmp_path, 2, "nonfinite") is None      # over budget
+    # a NEW reason always gets its first dump, even over budget
+    assert fr.dump(tmp_path, 3, "slo") is not None
+    assert len(fr.dumps) == 3
+
+
+def test_flight_state_roundtrip():
+    fr = FlightRecorder(capacity=4, max_dumps=1)
+    for t in range(6):
+        fr.record({"tick": t})
+    state = json.loads(json.dumps(fr.state()))
+    fr2 = FlightRecorder(capacity=4)
+    fr2.load_state(state)
+    assert fr2.records() == fr.records()
+    assert fr2.records_total == 6
+
+
+# ---------------------------------------------------------- sink + runtime
+
+
+def _har3():
+    ds = make_har_dataset(seed=0, samples_per_class=100)
+    lo, hi = ds.x.min(0), ds.x.max(0)
+    ds = ds._replace(x=((ds.x - lo) / (hi - lo + 1e-6)).astype(np.float32))
+    train, test = train_test_split(ds, 0.8, seed=0)
+
+    def sub(d):
+        m = d.y < 3
+        return AnomalyDataset(d.name, d.x[m], d.y[m], d.class_names[:3])
+
+    return sub(train), sub(test)
+
+
+@pytest.fixture(scope="module")
+def obs_scenario():
+    """8 devices, 60 ticks, 2 drifting mid-soak — small enough that the
+    telemetry integration tests stay cheap."""
+    train3, test3 = _har3()
+    ticks, batch = 60, 2
+    drift = tuple(
+        DriftEvent(device=d, step=60 + 11 * i, new_pattern=2)
+        for i, d in enumerate((2, 5))
+    )
+    fs = make_fleet_streams(
+        train3, 8, ticks * batch, n_init=2 * H_RT, drift=drift, seed=0,
+        n_assign=2,
+    )
+    x_eval, y_eval = anomaly_eval_arrays(test3, [0, 1], anomaly_ratio=0.3, seed=0)
+    return train3, fs, batch
+
+
+def _mk_runtime(fs, n_features, *, telemetry=None, **cfg_kw):
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), fs.n_devices, n_features, H_RT, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    cfg_kw.setdefault("governor", GovernorConfig(merge_every=16))
+    cfg = RuntimeConfig(
+        topology=ring(fs.n_devices, hops=2), ridge=RIDGE,
+        detector=DetectorConfig(),
+        telemetry=telemetry, **cfg_kw,
+    )
+    return FleetRuntime(fleet, cfg)
+
+
+def test_runtime_compile_once_with_telemetry(obs_scenario):
+    """Enabling the sink must not add a single retrace."""
+    train3, fs, batch = obs_scenario
+    rt = _mk_runtime(
+        fs, train3.n_features, telemetry=TelemetryConfig(band_sample_every=1)
+    )
+    rt.run(TickFeed(fs, batch))
+    sizes = rt.assert_compile_once()
+    assert all(v == 1 for v in sizes.values())
+    summary = rt.finalize_telemetry()
+    assert summary["ticks"] == 60
+    assert summary["merge_rounds"] == rt.governor.state.merges
+    assert summary["bytes_total"] == rt.governor.state.bytes_spent
+    # band histograms sampled every tick here: calibrated devices observed
+    assert summary["metrics"]["detector_band_width"]["series"][0]["count"] > 0
+    # every phase that ran has latency stats
+    assert {"poison", "ingest", "govern"} <= set(summary["phases"])
+
+
+def test_runtime_telemetry_counters_survive_restore(tmp_path, obs_scenario):
+    """Kill/restore continuity: the restored sink resumes the counter
+    trajectory (ticks, merges, bytes) instead of restarting from zero."""
+    train3, fs, batch = obs_scenario
+
+    def fresh():
+        return _mk_runtime(
+            fs, train3.n_features, telemetry=TelemetryConfig(),
+            snapshot_every=20, snapshot_dir=tmp_path,
+        )
+
+    rt = fresh()
+    feed = TickFeed(fs, batch)
+    rt.run(feed, ticks=40)
+    rt.snapshot()
+    before = rt.telemetry.state()
+
+    rt2 = fresh()
+    assert rt2.restore() == 40
+    assert int(rt2.telemetry.ticks.value) == 40
+    assert rt2.telemetry.state()["registry"] == before["registry"]
+    assert rt2.detections_total == rt.detections_total
+    # counters keep climbing from the restored base, monotonically
+    rt2.tick(feed.tick_batch(40))
+    assert int(rt2.telemetry.ticks.value) == 41
+    assert rt2.telemetry.tick_seconds.count == 41
+
+
+def test_runtime_flight_dump_on_nan_payload(tmp_path, obs_scenario):
+    """An injected NaN payload must trigger a ``flight_<tick>.json``
+    whose captured inputs are the failing tick's post-poison batch."""
+    train3, fs, batch = obs_scenario
+    rt = _mk_runtime(
+        fs, train3.n_features,
+        telemetry=TelemetryConfig(dir=str(tmp_path / "tel")),
+        governor=GovernorConfig(merge_every=8),
+        robust=RobustConfig(trim=1),
+        faults=FaultInjector(
+            (FaultSpec(kind="nan", frac=0.2, start_tick=4, seed=3),),
+            fs.n_devices, seed=0,
+        ),
+    )
+    feed = TickFeed(fs, batch)
+    reports = rt.run(feed)
+    summary = rt.finalize_telemetry()
+    assert summary["nonfinite_payloads_total"] > 0
+    assert summary["flight"]["dumps"], "no flight dump written"
+    dump = load_dump(summary["flight"]["dumps"][0])
+    assert dump["reason"] == "nonfinite"
+    t = dump["tick"]
+    assert reports[t].nonfinite_payloads > 0
+    np.testing.assert_array_equal(dump["inputs"], feed.tick_batch(t))
+    # the ring's newest record is the failing tick itself
+    assert dump["ring"][-1]["tick"] == t
+    assert dump["ring"][-1]["losses"] == pytest.approx(
+        np.asarray(reports[t].losses, np.float64), rel=1e-6
+    )
+
+
+def test_runtime_detections_log_is_bounded(obs_scenario):
+    train3, fs, batch = obs_scenario
+    rt = _mk_runtime(fs, train3.n_features, detections_cap=3)
+    rt.run(TickFeed(fs, batch))
+    assert len(rt.detections) <= 3
+    assert rt.detections_total >= len(rt.detections)
+    assert rt.detections_total > 0  # the drifted devices did flag
+
+
+def test_sink_rejects_unknown_phase():
+    sink = TelemetrySink(TelemetryConfig())
+    with pytest.raises(ValueError):
+        sink.phase("warp")
+    with sink.phase("ingest"):
+        pass
+    assert sink.phase_seconds.labels(phase="ingest").count == 1
