@@ -32,6 +32,7 @@ BENCHES = [
     ("kernel_bench", "ours — Pallas kernel micro-bench (interpret)"),
     ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),
     ("robust_fleet", "ours — Byzantine-robust merges + fault-injection chaos soak"),
+    ("serve_ingress", "ours — async serving front-end chaos-under-load soak"),
     ("roofline_report", "ours — dry-run roofline artifact summary"),
 ]
 

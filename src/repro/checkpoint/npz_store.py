@@ -94,9 +94,28 @@ def load_pytree(template: PyTree, path: str | os.PathLike) -> PyTree:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | os.PathLike, *, keep: int = 3) -> None:
+    """Retention-managed snapshot directory.
+
+    Writes are atomic (tmp + ``os.replace``), so a crash mid-save can
+    never leave a truncated file under a real checkpoint name — the
+    restore walk-back stays as the last line of defense against the
+    disk itself lying. ``keep``/``keep_last`` bounds the directory to
+    the N newest snapshots so long soaks don't accumulate unbounded
+    state; ``keep=None`` retains everything."""
+
+    def __init__(
+        self,
+        directory: str | os.PathLike,
+        *,
+        keep: int | None = 3,
+        keep_last: int | None = None,
+    ) -> None:
         self.dir = Path(directory)
-        self.keep = keep
+        # keep_last is the retention spelling the serving stack uses;
+        # both names set the same knob, keep_last wins if both passed
+        self.keep = keep_last if keep_last is not None else keep
+        if self.keep is not None and self.keep < 1:
+            raise ValueError(f"retention must keep >= 1 snapshot, got {self.keep}")
         self.dir.mkdir(parents=True, exist_ok=True)
 
     def save(self, step: int, tree: PyTree) -> Path:
@@ -147,6 +166,12 @@ class CheckpointManager:
         ) from last_err
 
     def _gc(self) -> None:
+        # a *.tmp in the directory is a previous process's interrupted
+        # save — junk by construction (the atomic rename never happened)
+        for turd in self.dir.glob("*.tmp"):
+            turd.unlink(missing_ok=True)
+        if self.keep is None:
+            return
         ckpts = sorted(self.dir.glob("ckpt_*.npz"))
         for old in ckpts[: -self.keep]:
             old.unlink()

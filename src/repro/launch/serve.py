@@ -16,12 +16,18 @@ With ``--telemetry-dir`` the loop emits through a ``repro.obs``
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduced \
         --rounds 4 --batch 4 --prompt-len 64 --new-tokens 16
+
+``--fleet`` switches to the async fleet ingress driver
+(``repro.launch.serve_fleet``): concurrent synthetic clients streaming
+per-device samples through a ``ServeFrontend`` in front of a resident
+``FleetRuntime`` — the serving-under-load path the README documents.
 """
 from __future__ import annotations
 
 import argparse
 import contextlib
 import json
+import sys
 import time
 
 import jax
@@ -35,6 +41,13 @@ from repro.runtime import DetectorConfig, detector_update, init_detector
 
 
 def main() -> None:
+    if "--fleet" in sys.argv[1:]:
+        # the async fleet-ingress driver owns its own arg surface
+        from repro.launch.serve_fleet import main as fleet_main
+
+        sys.argv.remove("--fleet")
+        fleet_main()
+        return
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -44,9 +57,19 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--drift-round", type=int, default=-1,
                     help="inject a shifted-distribution batch at this round")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed (prompts, params, drift injection)")
     ap.add_argument("--telemetry-dir", default=None,
                     help="emit trace.jsonl/exposition.txt into this directory")
     args = ap.parse_args()
+    # a zero-round or zero-batch run would exit silently green — make
+    # the misconfiguration loud instead
+    if args.rounds < 1:
+        ap.error(f"--rounds must be >= 1 (got {args.rounds}): a zero-round "
+                 "serving loop does nothing")
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1 (got {args.batch}): every round "
+                 "serves at least one request")
 
     sink = (
         TelemetrySink(TelemetryConfig(dir=args.telemetry_dir))
@@ -72,7 +95,7 @@ def main() -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
     B, S = args.batch, args.prompt_len
     max_seq = S + args.new_tokens
@@ -105,7 +128,7 @@ def main() -> None:
         warm_feats.append(f)
     warm = jnp.concatenate(warm_feats)
     detector = init_autoencoder(
-        jax.random.PRNGKey(7), cfg.d_model, cfg.detector_hidden,
+        jax.random.fold_in(key, 7), cfg.d_model, cfg.detector_hidden,
         jnp.tile(warm, (2 * cfg.detector_hidden // warm.shape[0] + 1, 1)),
         activation="identity", ridge=1e-2,
     )

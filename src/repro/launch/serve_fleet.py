@@ -1,0 +1,137 @@
+"""Async fleet-ingress driver: concurrent clients → ServeFrontend →
+resident FleetRuntime.
+
+The runnable face of the serving-under-load stack (README "Serving
+under load"): N synthetic clients stream per-device sample bursts
+through the deadline batcher, the admission controller applies
+backpressure, and the run exits with the ingress summary — accepted /
+acked / shed / deferred, admission and request latency percentiles —
+from the runtime's own telemetry sink.
+
+    PYTHONPATH=src python -m repro.launch.serve_fleet \
+        --devices 64 --batch 2 --requests 2000 --clients 8
+
+    # durable mode: snapshots + write-ahead log, resumable after a kill
+    PYTHONPATH=src python -m repro.launch.serve_fleet \
+        --devices 64 --snapshot-dir /tmp/fleet-snap --wal-dir /tmp/fleet-wal
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+
+import jax
+import numpy as np
+
+from repro.fleet import init_fleet, ring
+from repro.obs import TelemetryConfig
+from repro.runtime import FleetRuntime, GovernorConfig, RuntimeConfig
+from repro.serve import (
+    AdmissionConfig,
+    SampleRequest,
+    ServeConfig,
+    ServeFrontend,
+)
+
+
+def build_frontend(args) -> tuple[FleetRuntime, ServeFrontend]:
+    rng = np.random.default_rng(args.seed)
+    d, f, h = args.devices, args.features, args.hidden
+    x_init = rng.normal(size=(d, 2 * h, f)).astype(np.float32)
+    fleet = init_fleet(
+        jax.random.PRNGKey(args.seed), d, f, h, x_init,
+        activation="identity", ridge=1e-3,
+    )
+    runtime = FleetRuntime(fleet, RuntimeConfig(
+        topology=ring(d, hops=2),
+        governor=GovernorConfig(merge_every=args.merge_every),
+        snapshot_every=args.snapshot_every if args.snapshot_dir else None,
+        snapshot_dir=args.snapshot_dir,
+        telemetry=TelemetryConfig(dir=args.telemetry_dir),
+    ))
+    frontend = ServeFrontend(runtime, ServeConfig(
+        batch=args.batch,
+        max_delay_s=args.max_delay_ms / 1e3,
+        admission=AdmissionConfig(
+            slo_p99_s=args.slo_ms / 1e3 if args.slo_ms else None,
+        ),
+        wal_dir=args.wal_dir,
+        seed=args.seed,
+    ), fallback=x_init[:, -1, :])
+    return runtime, frontend
+
+
+async def run_clients(frontend: ServeFrontend, args) -> list:
+    rng = np.random.default_rng(args.seed + 1)
+    per_client = -(-args.requests // args.clients)
+
+    async def client(c: int) -> list:
+        acks = []
+        for i in range(per_client):
+            dev = int(rng.integers(args.devices))
+            x = rng.normal(size=(1, args.features)).astype(np.float32)
+            acks.append(await frontend.submit_with_retries(
+                SampleRequest(device=dev, x=x, client=f"client-{c}")
+            ))
+        return acks
+
+    nested = await asyncio.gather(*[client(c) for c in range(args.clients)])
+    return [a for acks in nested for a in acks]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--devices", type=int, default=64)
+    ap.add_argument("--features", type=int, default=16)
+    ap.add_argument("--hidden", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=2,
+                    help="per-device samples per tick window")
+    ap.add_argument("--requests", type=int, default=2000)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--merge-every", type=int, default=16)
+    ap.add_argument("--max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="tick p99 SLO driving admission backpressure")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--snapshot-dir", default=None)
+    ap.add_argument("--snapshot-every", type=int, default=64)
+    ap.add_argument("--wal-dir", default=None)
+    ap.add_argument("--recover", action="store_true",
+                    help="restore newest snapshot + replay WAL before serving")
+    ap.add_argument("--telemetry-dir", default=None)
+    args = ap.parse_args()
+    for name in ("devices", "batch", "requests", "clients", "merge_every"):
+        if getattr(args, name) < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1 "
+                     f"(got {getattr(args, name)})")
+    if args.recover and not args.snapshot_dir:
+        ap.error("--recover requires --snapshot-dir")
+
+    runtime, frontend = build_frontend(args)
+    if args.recover:
+        restored, replayed = frontend.recover()
+        print(f"recovered: tick {restored} + {replayed} replayed windows")
+
+    async def serve() -> list:
+        await frontend.start()
+        try:
+            return await run_clients(frontend, args)
+        finally:
+            await frontend.stop()
+
+    acks = asyncio.run(serve())
+    by_status: dict[str, int] = {}
+    for a in acks:
+        by_status[a.status] = by_status.get(a.status, 0) + 1
+    summary = runtime.finalize_telemetry()
+    print(json.dumps({
+        "acks": by_status,
+        "ticks": runtime.tick_no,
+        "merges": runtime.governor.state.merges,
+        "ingress": summary["ingress"],
+    }, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

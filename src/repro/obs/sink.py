@@ -130,6 +130,59 @@ class TelemetrySink:
             "detector_loss_ratio", "tick loss / baseline mean (calibrated)",
             buckets=_RATIO_BUCKETS, sample_cap=cap,
         )
+
+        # ---- ingress catalog (the async serving front-end's families;
+        # pre-declared here so serve-loop state rides the SAME registry
+        # snapshot the runtime persists — counters stay continuous
+        # across a kill/restore and no benchmark forks its accounting)
+        self.ingress_queue_depth = r.gauge(
+            "ingress_queue_depth", "admitted requests waiting in windows"
+        )
+        self.ingress_accepted = r.counter(
+            "ingress_accepted_total", "requests admitted into a tick window"
+        )
+        self.ingress_acked = r.counter(
+            "ingress_acked_total", "requests acked with a served result"
+        )
+        self.ingress_shed = r.counter(
+            "ingress_shed_total", "requests shed by reason",
+            labels=("reason",),
+        )
+        self.ingress_deferred = r.counter(
+            "ingress_deferred_total", "requests deferred (retryable) by reason",
+            labels=("reason",),
+        )
+        self.ingress_retried = r.counter(
+            "ingress_retried_total", "client retries after a deferral"
+        )
+        self.ingress_stale = r.counter(
+            "ingress_stale_served_total",
+            "requests answered from the stale-score cache (degraded)",
+        )
+        self.ingress_replayed = r.counter(
+            "ingress_replayed_ticks_total",
+            "tick windows replayed from the write-ahead log on recovery",
+        )
+        self.ingress_degraded_mode = r.gauge(
+            "ingress_degraded_mode",
+            "current degraded-ladder rung (0=normal 1=skip-merge "
+            "2=stale-scores 3=shed)",
+        )
+        self.ingress_transitions = r.counter(
+            "ingress_degraded_transitions_total",
+            "degraded-ladder transitions by target mode",
+            labels=("mode",),
+        )
+        self.ingress_admission_seconds = r.histogram(
+            "ingress_admission_seconds",
+            "submit-to-admission-decision latency",
+            buckets=LATENCY_BUCKETS_S, sample_cap=cap,
+        )
+        self.ingress_request_seconds = r.histogram(
+            "ingress_request_seconds",
+            "submit-to-ack latency of served requests",
+            buckets=LATENCY_BUCKETS_S, sample_cap=cap,
+        )
         # bound observe callables once — phase() sits on the tick path
         self._phase_observe = {
             p: self.phase_seconds.labels(phase=p).observe for p in TICK_PHASES
@@ -188,6 +241,44 @@ class TelemetrySink:
             for key, child in sorted(self.merge_bytes.children.items())
         }
 
+    def ingress_stats(self) -> dict:
+        """The serving front-end's view: admission outcomes, queue
+        depth, degraded-ladder position, and submit-to-ack latency."""
+        def _latency(h):
+            if h.count == 0:
+                return None
+            return {
+                "count": h.count,
+                "mean_s": h.sum / h.count,
+                "p50_s": h.quantile(0.50),
+                "p99_s": h.quantile(0.99),
+                "max_s": h.vmax,
+            }
+
+        return {
+            "accepted": int(self.ingress_accepted.value),
+            "acked": int(self.ingress_acked.value),
+            "retried": int(self.ingress_retried.value),
+            "stale_served": int(self.ingress_stale.value),
+            "replayed_ticks": int(self.ingress_replayed.value),
+            "queue_depth": int(self.ingress_queue_depth.value),
+            "shed": {
+                key[0]: int(child.value)
+                for key, child in sorted(self.ingress_shed.children.items())
+            },
+            "deferred": {
+                key[0]: int(child.value)
+                for key, child in sorted(self.ingress_deferred.children.items())
+            },
+            "degraded_mode": int(self.ingress_degraded_mode.value),
+            "degraded_transitions": {
+                key[0]: int(child.value)
+                for key, child in sorted(self.ingress_transitions.children.items())
+            },
+            "admission_latency": _latency(self.ingress_admission_seconds),
+            "request_latency": _latency(self.ingress_request_seconds),
+        }
+
     def summary(self) -> dict:
         """End-of-run summary dict — the one surface benchmarks consume."""
         t = self.tick_seconds
@@ -211,6 +302,7 @@ class TelemetrySink:
                 "max_s": t.vmax,
             },
             "phases": self.phase_stats(),
+            "ingress": self.ingress_stats(),
             "flight": {
                 "recorded": self.flight.records_total,
                 "ring_len": len(self.flight),

@@ -49,6 +49,8 @@ class GovernorState:
     deferred_budget: int = 0
     deferred_participants: int = 0
     bytes_spent: int = 0
+    deferred_degraded: int = 0   # candidate rounds skipped by a degraded
+                                 # serving front-end (allow=False)
 
     @property
     def bytes_per_tick(self) -> float:
@@ -59,6 +61,8 @@ class GovernorState:
 class MergeDecision:
     merge: bool
     reason: str            # "merge" | "cadence" | "budget" | "participants"
+                           # | "degraded" (caller vetoed: serving front-end
+                           #   in a skip-merge degraded mode)
     participants: int
     round_bytes: int
     fp_participants: int = 0   # participants shipping full-precision f32
@@ -167,13 +171,32 @@ class MergeGovernor:
         fp_part = min(rb, int(self._full_round_bytes * fp / d))
         return {"f32": fp_part, self.payload_precision: rb - fp_part}
 
+    def budget_utilization(self) -> float:
+        """Fraction of the comm-budget SLO currently spent (bytes/tick
+        over ``budget_bytes_per_tick``); 0.0 when the budget is
+        unlimited. An admission controller uses this as the governor's
+        backpressure signal: utilization near 1.0 means the next merge
+        round is already at risk of deferral, so accepting more traffic
+        only grows the queue it cannot drain."""
+        if self.cfg.budget_bytes_per_tick is None:
+            return 0.0
+        return self.state.bytes_per_tick / self.cfg.budget_bytes_per_tick
+
     def decide(
-        self, tick: int, mask: np.ndarray, fp_mask: np.ndarray | None = None
+        self,
+        tick: int,
+        mask: np.ndarray,
+        fp_mask: np.ndarray | None = None,
+        *,
+        allow: bool = True,
     ) -> MergeDecision:
         """Admission control for one tick. Call exactly once per tick
         (it advances the budget ledger's tick count). ``fp_mask`` is
         the detector's quarantine-risk vector: participants it covers
-        are priced at f32 instead of the governed wire precision."""
+        are priced at f32 instead of the governed wire precision.
+        ``allow=False`` vetoes the merge regardless of cadence — the
+        serving front-end's skip-merge degraded mode — while still
+        advancing the tick ledger so budget accounting stays honest."""
         self.state.ticks = tick + 1
         mask = np.asarray(mask)
         participants = int(mask.sum())
@@ -182,6 +205,10 @@ class MergeGovernor:
         else:
             fp = int((mask.astype(bool) & np.asarray(fp_mask, bool)).sum())
         rb = self.round_bytes(participants, fp)
+        if not allow:
+            if (tick + 1) % self.cfg.merge_every == 0:
+                self.state.deferred_degraded += 1
+            return MergeDecision(False, "degraded", participants, rb, fp)
         if (tick + 1) % self.cfg.merge_every != 0:
             return MergeDecision(False, "cadence", participants, rb, fp)
         if participants < self.cfg.min_participants:

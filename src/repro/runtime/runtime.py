@@ -33,6 +33,7 @@ soak benchmark enforces.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import time
 from collections import deque
 from pathlib import Path
@@ -72,6 +73,8 @@ from repro.runtime.detector import (
 )
 from repro.runtime.feed import TickFeed
 from repro.runtime.governor import GovernorConfig, MergeDecision, MergeGovernor
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +127,22 @@ class TickReport:
                                              # of an admitted robust merge round
     nonfinite_payloads: int = 0  # payloads rejected by the finite guard this tick
     ingest_seconds: float | None = None  # fenced wall-clock of ingest + detect
+    served: np.ndarray | None = None  # (D,) devices whose batch rows carried
+                                      # real (non-padding) samples this tick;
+                                      # None = every row (the default path)
+
+
+def _where_served(keep: jnp.ndarray, new, old):
+    """Per-device select over a (D,)-leading pytree: devices with
+    ``keep`` take the freshly-computed leaves, the rest keep their old
+    state bit-for-bit (an un-served device must not train, and its
+    detector must not observe, a padded batch row)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(
+            keep.reshape(keep.shape + (1,) * (n.ndim - 1)), n, o
+        ),
+        new, old,
+    )
 
 
 class _NullPhase:
@@ -229,33 +248,45 @@ class FleetRuntime:
             # fleet is concrete
             validate_shared_basis(states)
 
-            def ingest_detect(fleet, det, batch, rebase, participants):
+            def ingest_detect(fleet, det, batch, rebase, participants, served):
                 # the fused ingest family computes the pre-train drift
                 # signal and the k=1 window updates in ONE pass over the
                 # batch ((P, β) resident across the window) — same
                 # losses the two-pass reference produces
-                fleet, losses = fleet_ingest(
+                trained, losses = fleet_ingest(
                     fleet, batch, backend=config.ingest_backend
                 )
-                det, drifted, fresh = detector_update(
+                det_new, drifted, fresh = detector_update(
                     det, losses, det_cfg, rebase=rebase, participants=participants
                 )
-                return fleet, det, losses, drifted, fresh
+                # un-served devices (padded rows of a partially-filled
+                # serving window) keep model AND detector state — the
+                # served mask is a traced operand, so partial windows
+                # never retrace; all-ones served is bit-for-bit the
+                # unmasked path
+                keep = served.astype(bool)
+                fleet = _where_served(keep, trained, fleet)
+                det = _where_served(keep, det_new, det)
+                return fleet, det, losses, det.drifted, fresh & keep
         else:
-            def ingest_detect(fleet, det, batch, rebase, participants):
+            def ingest_detect(fleet, det, batch, rebase, participants, served):
                 # score BEFORE training: the loss of the incoming data under
                 # the current model is the drift signal (§3.4 / 2203.01077)
                 losses = jax.vmap(lambda s, xb: jnp.mean(ae_score(s, xb)))(fleet, batch)
-                fleet = _fleet_train(fleet, batch)  # k=1 sequential updates
-                det, drifted, fresh = detector_update(
+                trained = _fleet_train(fleet, batch)  # k=1 sequential updates
+                det_new, drifted, fresh = detector_update(
                     det, losses, det_cfg, rebase=rebase, participants=participants
                 )
-                return fleet, det, losses, drifted, fresh
+                keep = served.astype(bool)
+                fleet = _where_served(keep, trained, fleet)
+                det = _where_served(keep, det_new, det)
+                return fleet, det, losses, det.drifted, fresh & keep
 
         self._ingest_detect = jax.jit(ingest_detect)
         # first tick after a merge: participants' bands rebase common-mode
         self._post_merge = False
         self._merge_mask = np.ones(n_devices, bool)
+        self._all_served = np.ones(n_devices, bool)
 
         # error-feedback accumulator of the quantized merge path (None on
         # the exact-f32 path); advanced only on admitted merge rounds
@@ -393,13 +424,28 @@ class FleetRuntime:
         if self.telemetry is not None:
             self.telemetry._phase_observe[name](seconds)
 
-    def tick(self, batch: np.ndarray) -> TickReport:
+    def tick(
+        self,
+        batch: np.ndarray,
+        *,
+        served: np.ndarray | None = None,
+        allow_merge: bool = True,
+    ) -> TickReport:
         """Process one serving tick: ingest + detect, then govern and
-        (maybe) merge between ticks, then (maybe) snapshot. With
-        telemetry configured an escaping exception dumps the flight
-        ring (plus this tick's input batch) before propagating."""
+        (maybe) merge between ticks, then (maybe) snapshot.
+
+        ``served`` is the serving front-end's (D,) admission outcome:
+        devices marked False carry padding in their batch row and keep
+        their model/detector state untouched (all-ones — the default —
+        is bit-for-bit the unmasked tick). ``allow_merge=False`` vetoes
+        any merge this tick (the skip-merge degraded mode) while the
+        governor's ledger keeps advancing. Both are per-tick operands
+        of the compile-once tick function — never a retrace.
+
+        With telemetry configured an escaping exception dumps the
+        flight ring (plus this tick's input batch) before propagating."""
         try:
-            return self._tick(batch)
+            return self._tick(batch, served, allow_merge)
         except Exception:
             tel = self.telemetry
             if tel is not None:
@@ -409,9 +455,36 @@ class FleetRuntime:
                 tel.write_outputs()
             raise
 
-    def _tick(self, batch: np.ndarray) -> TickReport:
+    def _tick(
+        self,
+        batch: np.ndarray,
+        served: np.ndarray | None = None,
+        allow_merge: bool = True,
+    ) -> TickReport:
         t = self.tick_no
         injector = self.config.faults
+        batch = np.asarray(batch)
+        d = self.n_devices
+        if batch.ndim != 3 or batch.shape[0] != d:
+            raise ValueError(
+                f"tick batch must be (n_devices={d}, B, features); got "
+                f"shape {batch.shape}"
+            )
+        if batch.shape[1] < 1:
+            raise ValueError(
+                "tick batch has zero samples per device (B=0) — an "
+                "all-shed tick window carries no data to ingest; skip "
+                "dispatching the tick, or pad the window and mark the "
+                "padded devices via served=..."
+            )
+        if served is None:
+            served_np = self._all_served
+        else:
+            served_np = np.asarray(served).astype(bool)
+            if served_np.shape != (d,):
+                raise ValueError(
+                    f"served mask must be ({d},); got {served_np.shape}"
+                )
         t_start = time.perf_counter()
         with self._phase("poison"):
             if injector is not None:
@@ -426,6 +499,7 @@ class FleetRuntime:
         self.states, self.det, losses, drifted, fresh = self._ingest_detect(
             self.states, self.det, jnp.asarray(batch),
             jnp.asarray(self._post_merge), jnp.asarray(self._merge_mask),
+            jnp.asarray(served_np),
         )
         jax.block_until_ready((self.states, self.det, losses))
         ingest_seconds = time.perf_counter() - t0
@@ -462,7 +536,7 @@ class FleetRuntime:
                 # crashed devices are down for the window: no publish, no
                 # download — regardless of gating mode
                 mask = mask & ~injector.crash_mask(t)
-            decision = self.governor.decide(t, mask, fp_mask)
+            decision = self.governor.decide(t, mask, fp_mask, allow=allow_merge)
 
         merge_seconds = None
         robust_scores = None
@@ -529,7 +603,7 @@ class FleetRuntime:
             self._record_telemetry(
                 t, batch, losses_np, drifted_np, fresh_np, n_fresh, decision,
                 ingest_seconds, merge_seconds, tick_seconds,
-                robust_scores, nonfinite,
+                robust_scores, nonfinite, served_np,
             )
 
         self._post_merge = decision.merge
@@ -548,6 +622,7 @@ class FleetRuntime:
             fresh_detections=fresh_np, decision=decision,
             merge_seconds=merge_seconds, robust_scores=robust_scores,
             nonfinite_payloads=nonfinite, ingest_seconds=ingest_seconds,
+            served=None if served is None else served_np,
         )
 
     def _record_telemetry(
@@ -555,6 +630,7 @@ class FleetRuntime:
         fresh: np.ndarray, n_fresh: int, decision: MergeDecision,
         ingest_seconds: float, merge_seconds: float | None,
         tick_seconds: float, robust_scores: np.ndarray | None, nonfinite: int,
+        served: np.ndarray | None = None,
     ) -> None:
         """Fold one tick into the sink: counters/gauges/histograms, the
         flight-ring record, and the nonfinite/SLO dump triggers."""
@@ -611,10 +687,15 @@ class FleetRuntime:
         if nonfinite:
             tel.nonfinite.inc(nonfinite)
 
+        # partially-served windows: padded rows scored padding data, so
+        # loss stats aggregate over served devices only
+        live = losses if served is None or served.all() else losses[served]
+        if live.size == 0:
+            live = losses
         rec = {
             "tick": t,
-            "loss_mean": float(losses.mean()),
-            "loss_max": float(losses.max()),
+            "loss_mean": float(live.mean()),
+            "loss_max": float(live.max()),
             "quarantined": n_quarantined,
             "fresh": np.flatnonzero(fresh).tolist() if n_fresh else [],
             "decision": {
@@ -628,6 +709,8 @@ class FleetRuntime:
             "tick_seconds": tick_seconds,
             "nonfinite_payloads": nonfinite,
         }
+        if served is not None and not served.all():
+            rec["n_served"] = int(served.sum())
         if losses.shape[0] <= 512:
             # small fleets: full loss vector + quarantine set, the replay
             # probe's comparison surface; large fleets keep the ring lean
@@ -667,9 +750,57 @@ class FleetRuntime:
         return self.telemetry.summary()
 
     def run(self, feed: TickFeed, *, ticks: int | None = None) -> list[TickReport]:
-        """Drive the runtime over a feed (all of it by default)."""
+        """Drive the runtime over a feed (all of it by default). Asking
+        for more ticks than the feed holds is a truncation, not an
+        error: the runtime processes what exists and says so."""
+        if ticks is not None and ticks > feed.n_ticks:
+            logger.warning(
+                "run(ticks=%d) exceeds the feed's %d ticks; truncating",
+                ticks, feed.n_ticks,
+            )
         n = feed.n_ticks if ticks is None else min(ticks, feed.n_ticks)
         return [self.tick(feed.tick_batch(t)) for t in range(n)]
+
+    def warmup(self, batch_size: int) -> None:
+        """Compile the tick-loop jits before live traffic arrives.
+
+        Dispatches the ingest and merge traces on all-zero operands
+        with ``served`` all-False and a zero participation mask, then
+        DISCARDS every output — no model, detector, governor, or
+        telemetry state changes. Without this, the first real tick
+        pays multi-second XLA compilation, which a serving watchdog
+        cannot tell apart from a stalled runtime. Uses the same shapes
+        as real ticks, so compile-once still holds afterwards."""
+        d = self.n_devices
+        f = int(self.states.params.alpha.shape[1])
+        batch = jnp.zeros((d, batch_size, f), jnp.float32)
+        none_served = jnp.zeros(d, bool)
+        out = self._ingest_detect(
+            self.states, self.det, batch,
+            jnp.asarray(False), jnp.asarray(np.ones(d, bool)), none_served,
+        )
+        jax.block_until_ready(out)
+        mask = jnp.zeros(d, jnp.float32)
+        if self._merge_boundary is not None:
+            shape = tuple(self._last_good.shape)
+            out = self._merge_boundary(
+                self.states, mask, mask,
+                jnp.ones(shape[0], jnp.float32),
+                jnp.zeros(shape, jnp.float32),
+                jnp.zeros(shape[0], jnp.int32),
+                self._last_good,
+            )
+        elif self.config.staleness is not None:
+            out = self._merge_stale(
+                self.states, self._hist_u, self._hist_v, mask, jnp.int32(0)
+            )
+        elif self._residual is not None:
+            out = self._merge_fresh(
+                self.states, mask, jnp.zeros(d, bool), self._residual
+            )
+        else:
+            out = self._merge_fresh(self.states, mask)
+        jax.block_until_ready(out)
 
     # ------------------------------------------------------------ durability
 
@@ -684,7 +815,8 @@ class FleetRuntime:
                 [self.governor.state.ticks, self.governor.state.merges,
                  self.governor.state.bytes_spent,
                  self.governor.state.deferred_budget,
-                 self.governor.state.deferred_participants], np.int64,
+                 self.governor.state.deferred_participants,
+                 self.governor.state.deferred_degraded], np.int64,
             ),
             # (N, 2) detection-event ring; restored whole (shape may
             # differ from the template's — the numpy path allows that)
@@ -737,6 +869,11 @@ class FleetRuntime:
         self.governor.state.bytes_spent = int(gov[2])
         self.governor.state.deferred_budget = int(gov[3])
         self.governor.state.deferred_participants = int(gov[4])
+        # PR-8-era snapshots carry a 5-element gov ledger (no
+        # deferred_degraded); restoring one resets only that counter
+        self.governor.state.deferred_degraded = (
+            int(gov[5]) if gov.shape[0] > 5 else 0
+        )
         self.detections = deque(
             ((int(t), int(d)) for t, d in np.asarray(tree["detections"])),
             maxlen=self.config.detections_cap,

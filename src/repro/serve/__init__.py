@@ -1,0 +1,40 @@
+"""repro.serve — fault-tolerant async serving front-end.
+
+The production entry path in front of ``FleetRuntime``: many
+concurrent clients submit per-device sample bursts, a dynamic batcher
+closes constant-shape tick windows on max-batch-or-max-delay
+deadlines, an admission controller applies backpressure (queue depth,
+tick p99 SLO, the merge governor's comm budget) with explicit
+shed-vs-defer outcomes and per-client fair-share caps, a degraded-mode
+ladder (skip-merge → serve-stale-scores → shed) keeps the fleet
+answering under overload, and a write-ahead log of closed windows
+makes a SIGKILL recoverable: restore the newest snapshot, replay the
+logged suffix bit-identically, ack every admitted request exactly
+once.
+
+See README "Serving under load" and ``benchmarks/serve_ingress.py``
+for the measured contract.
+"""
+from repro.serve.admission import (
+    ADMIT,
+    DEFER,
+    SHED,
+    STALE,
+    AdmissionConfig,
+    AdmissionController,
+)
+from repro.serve.batcher import TickWindow, WindowBuilder
+from repro.serve.degraded import DegradedLadder, LadderConfig, Mode
+from repro.serve.frontend import RetryConfig, ServeConfig, ServeFrontend
+from repro.serve.protocol import Ack, SampleRequest, request_id
+from repro.serve.wal import WriteAheadLog
+
+__all__ = [
+    "ADMIT", "DEFER", "SHED", "STALE",
+    "AdmissionConfig", "AdmissionController",
+    "TickWindow", "WindowBuilder",
+    "DegradedLadder", "LadderConfig", "Mode",
+    "RetryConfig", "ServeConfig", "ServeFrontend",
+    "Ack", "SampleRequest", "request_id",
+    "WriteAheadLog",
+]

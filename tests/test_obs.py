@@ -391,3 +391,52 @@ def test_sink_rejects_unknown_phase():
     with sink.phase("ingest"):
         pass
     assert sink.phase_seconds.labels(phase="ingest").count == 1
+
+
+# ------------------------------------------------- ingress metrics (PR 9)
+
+
+def test_sink_ingress_stats_in_summary():
+    """The serving front-end books everything through the runtime sink —
+    summary() carries an ingress block with admission outcomes, the
+    degraded-ladder position, and submit-to-ack latency."""
+    sink = TelemetrySink(TelemetryConfig(trace=False))
+    sink.ingress_accepted.inc(5)
+    sink.ingress_acked.inc(4)
+    sink.ingress_retried.inc(2)
+    sink.ingress_stale.inc()
+    sink.ingress_shed.labels(reason="queue_full").inc(3)
+    sink.ingress_deferred.labels(reason="backpressure").inc(2)
+    sink.ingress_deferred.labels(reason="comm_budget").inc()
+    sink.ingress_degraded_mode.set(2)
+    sink.ingress_transitions.labels(mode="stale_scores").inc()
+    sink.ingress_request_seconds.observe(0.004)
+    sink.ingress_request_seconds.observe(0.019)
+
+    ing = sink.summary()["ingress"]
+    assert ing["accepted"] == 5 and ing["acked"] == 4
+    assert ing["retried"] == 2 and ing["stale_served"] == 1
+    assert ing["shed"] == {"queue_full": 3}
+    assert ing["deferred"] == {"backpressure": 2, "comm_budget": 1}
+    assert ing["degraded_mode"] == 2
+    assert ing["degraded_transitions"] == {"stale_scores": 1}
+    assert ing["request_latency"]["count"] == 2
+    assert ing["request_latency"]["p99_s"] > 0
+    assert ing["admission_latency"] is None  # nothing observed yet
+
+
+def test_sink_ingress_counters_survive_state_roundtrip():
+    """Ingress counters ride the same snapshot blob the runtime
+    persists, so a kill/restore keeps the serving counters continuous
+    instead of resetting them to zero."""
+    sink = TelemetrySink(TelemetryConfig(trace=False))
+    sink.ingress_accepted.inc(7)
+    sink.ingress_shed.labels(reason="degraded").inc(2)
+    sink.ingress_replayed.inc(3)
+
+    sink2 = TelemetrySink(TelemetryConfig(trace=False))
+    sink2.load_state_bytes(sink.state_bytes())
+    ing = sink2.ingress_stats()
+    assert ing["accepted"] == 7
+    assert ing["shed"] == {"degraded": 2}
+    assert ing["replayed_ticks"] == 3

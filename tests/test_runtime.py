@@ -506,3 +506,109 @@ def test_detector_config_frozen():
     cfg = DetectorConfig()
     with pytest.raises(dataclasses.FrozenInstanceError):
         cfg.alpha = 0.5
+
+
+# ------------------------------------------------- serving hooks (PR 9)
+
+
+def _mini_runtime(merge_every=4, d=8, f=6, h=4):
+    rng = np.random.default_rng(0)
+    x_init = rng.normal(size=(d, 2 * h, f)).astype(np.float32)
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), d, f, h, x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    return FleetRuntime(fleet, RuntimeConfig(
+        topology=ring(d, hops=1),
+        governor=GovernorConfig(merge_every=merge_every),
+    ))
+
+
+def _mini_batch(t, d=8, f=6, b=3):
+    rng = np.random.default_rng(100 + t)
+    return rng.normal(size=(d, b, f)).astype(np.float32)
+
+
+def test_tick_served_mask_freezes_unserved_devices():
+    """Devices outside the served mask keep model AND detector state
+    bit-for-bit — a padded window row must not leak into their update.
+    (Merge rounds legitimately touch every device, so keep them out of
+    frame with a long cadence.)"""
+    rt = _mini_runtime(merge_every=100)
+    for t in range(3):
+        rt.tick(_mini_batch(t))
+    beta0 = np.asarray(rt.states.beta).copy()
+    ewma0 = np.asarray(rt.det.ewma).copy()
+
+    served = np.ones(8, bool)
+    served[[2, 5]] = False
+    rep = rt.tick(_mini_batch(3), served=served)
+
+    beta1, ewma1 = np.asarray(rt.states.beta), np.asarray(rt.det.ewma)
+    for dev in (2, 5):  # unserved: frozen exactly
+        np.testing.assert_array_equal(beta1[dev], beta0[dev])
+        np.testing.assert_array_equal(ewma1[dev], ewma0[dev])
+    served_devs = np.flatnonzero(served)
+    assert not np.array_equal(beta1[served_devs], beta0[served_devs])
+    np.testing.assert_array_equal(np.asarray(rep.served), served)
+
+
+def test_tick_all_served_equals_default_path():
+    rt_a, rt_b = _mini_runtime(), _mini_runtime()
+    for t in range(4):
+        rt_a.tick(_mini_batch(t))
+        rt_b.tick(_mini_batch(t), served=np.ones(8, bool))
+    np.testing.assert_array_equal(
+        np.asarray(rt_a.states.beta), np.asarray(rt_b.states.beta)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rt_a.det.ewma), np.asarray(rt_b.det.ewma)
+    )
+
+
+def test_tick_allow_merge_veto_defers_candidate_rounds():
+    """allow_merge=False (the degraded ladder's skip-merge rung) vetoes
+    every governor-candidate round and books it as a degraded deferral."""
+    vetoed = _mini_runtime(merge_every=2)
+    for t in range(8):
+        vetoed.tick(_mini_batch(t), allow_merge=False)
+    assert vetoed.governor.state.merges == 0
+    assert vetoed.governor.state.deferred_degraded == 4  # ticks 2,4,6,8
+
+    normal = _mini_runtime(merge_every=2)
+    for t in range(8):
+        normal.tick(_mini_batch(t))
+    assert normal.governor.state.merges == 4
+    assert normal.governor.state.deferred_degraded == 0
+
+
+def test_tick_batch_validation_errors():
+    rt = _mini_runtime()
+    with pytest.raises(ValueError, match="n_devices=8"):
+        rt.tick(np.zeros((7, 3, 6), np.float32))  # wrong device count
+    with pytest.raises(ValueError, match="n_devices=8"):
+        rt.tick(np.zeros((8, 6), np.float32))  # missing batch axis
+    with pytest.raises(ValueError, match="all-shed"):
+        rt.tick(np.zeros((8, 0, 6), np.float32))  # B=0 window
+    with pytest.raises(ValueError, match=r"served mask must be \(8,\)"):
+        rt.tick(_mini_batch(0), served=np.ones(5, bool))
+
+
+def test_runtime_run_truncates_exhausted_feed(caplog):
+    """Asking run() for more ticks than the feed holds processes what
+    exists and warns, instead of raising mid-soak."""
+    train3, _ = _har3()
+    fs = make_fleet_streams(train3, 4, 24, n_init=4, seed=0, n_assign=2)
+    feed = TickFeed(fs, batch=4)  # 6 ticks
+    fleet = init_fleet(
+        jax.random.PRNGKey(0), 4, train3.n_features, H_RT, fs.x_init,
+        activation="identity", ridge=RIDGE,
+    )
+    rt = FleetRuntime(fleet, RuntimeConfig(
+        topology=ring(4, hops=1), governor=GovernorConfig(merge_every=16),
+    ))
+    with caplog.at_level("WARNING", logger="repro.runtime.runtime"):
+        reports = rt.run(feed, ticks=50)
+    assert len(reports) == feed.n_ticks == 6
+    assert rt.tick_no == 6
+    assert "truncating" in caplog.text
