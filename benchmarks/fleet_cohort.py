@@ -1,0 +1,260 @@
+"""Cohort-paged fleet benchmark — the million-device arena runtime.
+
+Every earlier benchmark kept the stacked fleet device-resident, capping
+D near 10⁴. This one drives ``CohortFleetRuntime``: per-device (P, β)
+in a host-side ``FleetArena``, cohorts streamed through the fused
+ingest double-buffered, and Eq. 8 as the two-tier tree (intra-cohort
+segment sums, O(cohorts) inter-cohort reduction). Measured at
+D = 131072 (the ``--smoke`` leg CI runs — still past the 10⁵ bar) and
+D = 1048576 devices (``--full``), Ñ=4 / n=8 / B=4 — the paper's tiny
+on-device autoencoder at fleet scale.
+
+Asserted claims:
+  - correctness first: at D=64 the paged runtime's TickReport stream
+    (losses, drift flags, merge decisions) matches the resident
+    ``FleetRuntime`` tick-by-tick, and the two-tier merged fleet state
+    agrees with the flat resident merge to ≤1e-5;
+  - the scale runtime is compile-once (``assert_compile_once``) — the
+    page jits trace exactly once across all cohorts and ticks;
+  - tier-2 (cross-cohort overlay) traffic is O(cohorts), not
+    O(devices): the star round at D=131072 ships 2·(cohorts−1)
+    payloads across the overlay vs 2·(D−1) for the flat round.
+
+Reported per scale point: paged tick wall-clock, virtual devices/sec
+through ingest, the two-tier merge wall-clock, and bytes/round per
+tier. Appends to ``BENCH_history.jsonl``; standalone/CI runs gate >25%
+wall-clock regressions (``_us``) and tier-2 reduction shrink
+(``_ratio``) against the previous same-backend entry.
+
+    PYTHONPATH=src python benchmarks/fleet_cohort.py [--smoke|--full]
+    PYTHONPATH=src python -m benchmarks.fleet_cohort
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):  # `python benchmarks/fleet_cohort.py` from repo root
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.history import record, record_and_gate
+from repro.fleet import FleetArena, cohort_round_cost, init_fleet, init_arena, star
+from repro.runtime import (
+    CohortFleetRuntime,
+    DetectorConfig,
+    FleetRuntime,
+    GovernorConfig,
+    RuntimeConfig,
+)
+
+N_HIDDEN = 4          # the paper's on-device autoencoder is tiny — the
+N_FEATURES = 8        # point of arena scale is D, not model width
+BATCH = 4             # samples per device per tick
+N_INIT = 16           # Eq. 13 boot chunk per device
+COHORT = 16384        # resident page: 16k devices ≈ 3 MB of (P, β)
+SMOKE_D = 131072      # 2¹⁷ — the CI leg, already past the 10⁵ bar
+FULL_D = 1048576      # 2²⁰ — the ROADMAP's million-device claim
+TIMED_TICKS = 4
+TIMED_MERGES = 3
+PARITY_D, PARITY_C, PARITY_TICKS = 64, 16, 8
+
+
+def _paged_config(d: int) -> RuntimeConfig:
+    return RuntimeConfig(
+        topology=star(d),
+        ridge=1e-2,
+        detector=DetectorConfig(warmup=4, warmup_skip=1),
+        governor=GovernorConfig(merge_every=4),
+        use_ingest_kernel=True,
+        ingest_backend="xla" if jax.default_backend() != "tpu" else "auto",
+    )
+
+
+def check_parity(seed: int = 0) -> float:
+    """Paged vs resident differential at D=64: identical TickReport
+    stream, ≤1e-5 fleet state after merges. Returns the max |β| gap."""
+    d, c = PARITY_D, PARITY_C
+    key = jax.random.PRNGKey(seed)
+    x0 = jax.random.normal(key, (d, N_INIT, N_FEATURES)) * 0.5
+    states = init_fleet(
+        jax.random.PRNGKey(seed + 1), d, N_FEATURES, N_HIDDEN, x0, ridge=1e-2
+    )
+    cfg = _paged_config(d)
+    resident = FleetRuntime(states, cfg)
+    paged = CohortFleetRuntime(FleetArena.from_fleet(states), cfg, cohort_size=c)
+    rng = np.random.default_rng(seed + 2)
+    for t in range(PARITY_TICKS):
+        batch = rng.normal(scale=0.5, size=(d, BATCH, N_FEATURES)).astype(np.float32)
+        r1 = resident.tick(batch)
+        r2 = paged.tick(batch)
+        np.testing.assert_allclose(r1.losses, r2.losses, rtol=1e-5, atol=1e-6)
+        assert np.array_equal(r1.drifted, r2.drifted), t
+        assert r1.decision == r2.decision, (t, r1.decision, r2.decision)
+    # the acceptance claim proper: ONE two-tier round vs ONE flat
+    # resident round over the SAME fleet state agrees ≤ 1e-5 (the sum
+    # tree only reorders f32 accumulation)
+    from repro.fleet import fleet_merge_masked
+
+    arena2 = FleetArena.from_fleet(resident.states)
+    ones = np.ones(d, bool)
+    paged.merger.merge(arena2, ones)
+    flat = fleet_merge_masked(
+        resident.states, cfg.topology, ones, ridge=cfg.ridge
+    )
+    gap = float(np.abs(np.asarray(flat.beta) - arena2.beta).max())
+    assert gap <= 1e-5, f"two-tier merge diverged from flat: {gap}"
+    # end-to-end drift after PARITY_TICKS ticks (training re-amplifies
+    # the per-round reorder noise) stays within a few ULP-mults of it
+    e2e = float(
+        np.abs(np.asarray(resident.states.beta) - paged.arena.beta).max()
+    )
+    assert e2e <= 5e-5, f"paged runtime drifted from resident: {e2e}"
+    return gap
+
+
+def run_scale(n_devices: int, seed: int = 0) -> dict:
+    """Time the paged runtime at scale: ingest ticks + one two-tier
+    merge round over a host arena that never exists as a stacked fleet."""
+    sched_cohort = min(COHORT, n_devices)
+    rng = np.random.default_rng(seed)
+    boot = rng.normal(scale=0.5, size=(sched_cohort, N_INIT, N_FEATURES)).astype(
+        np.float32
+    )
+
+    t0 = time.perf_counter()
+    arena = init_arena(
+        jax.random.PRNGKey(seed), n_devices, N_FEATURES, N_HIDDEN,
+        lambda lo, hi: boot[: hi - lo],
+        cohort_size=sched_cohort, ridge=1e-2,
+    )
+    init_seconds = time.perf_counter() - t0
+
+    cfg = _paged_config(n_devices)
+    rt = CohortFleetRuntime(arena, cfg, cohort_size=sched_cohort)
+    window = rng.normal(
+        scale=0.5, size=(sched_cohort, BATCH, N_FEATURES)
+    ).astype(np.float32)
+    batch_fn = lambda lo, hi: window[: hi - lo]  # noqa: E731
+
+    rt.tick(batch_fn, allow_merge=False)  # compile the page jits
+    # best-of floors (the serve_ingress idiom): shared-box load noise
+    # swings single-run wall-clock far past the 25% history gate
+    tick_us = []
+    for _ in range(TIMED_TICKS):
+        t0 = time.perf_counter()
+        rt.tick(batch_fn, allow_merge=False)
+        tick_us.append((time.perf_counter() - t0) * 1e6)
+    tick_best_us = float(np.min(tick_us))
+
+    ones = np.ones(n_devices, bool)
+    merge_us = []
+    for _ in range(TIMED_MERGES):
+        t0 = time.perf_counter()
+        cost = rt.merger.merge(arena, ones)
+        merge_us.append((time.perf_counter() - t0) * 1e6)
+    merge_best_us = float(np.min(merge_us))
+    rt.assert_compile_once()
+
+    # tier accounting: the overlay (tier 2) must be O(cohorts); the flat
+    # star round ships 2(D−1) payloads where the two-tier round's
+    # overlay ships 2(cohorts−1)
+    acct = cohort_round_cost(
+        cfg.topology, rt.schedule, N_HIDDEN, N_FEATURES
+    )
+    assert acct.tier2_payloads <= 2 * rt.schedule.n_cohorts, acct
+    flat_payloads = cfg.topology.payloads_per_round
+    tier2_reduction = flat_payloads / max(acct.tier2_payloads, 1)
+
+    return {
+        "n_devices": n_devices,
+        "cohort_size": sched_cohort,
+        "n_cohorts": rt.schedule.n_cohorts,
+        "batch": BATCH,
+        "arena_mb": arena.nbytes / 2**20,
+        "init_seconds": init_seconds,
+        "tick_us": tick_best_us,
+        "devices_per_sec": n_devices / (tick_best_us * 1e-6),
+        "samples_per_sec": n_devices * BATCH / (tick_best_us * 1e-6),
+        "merge_us": merge_best_us,
+        "tier1_bytes_per_round": cost.bytes_tier1,
+        "tier2_bytes_per_round": cost.bytes_tier2,
+        "flat_bytes_per_round": flat_payloads * acct.payload_bytes,
+        "tier2_reduction": tier2_reduction,
+    }
+
+
+def main(
+    device_grid: tuple[int, ...] = (SMOKE_D,),
+    out_path: str = "BENCH_fleet_cohort.json",
+    history_path: str = "BENCH_history.jsonl",
+    gate: bool = False,
+) -> list[str]:
+    parity_gap = check_parity()
+    rows = [run_scale(d) for d in device_grid]
+    report = {
+        "n_hidden": N_HIDDEN,
+        "n_features": N_FEATURES,
+        "batch": BATCH,
+        "backend": jax.default_backend(),
+        "parity_beta_gap": parity_gap,
+        "rows": rows,
+    }
+    with open(out_path, "w") as fh:
+        json.dump(report, fh, indent=2)
+
+    lines = [
+        f"fleet_cohort/parity_d{PARITY_D},nan,"
+        f"max_beta_gap={parity_gap:.2e};bound=1e-5"
+    ]
+    metrics: dict[str, float] = {}
+    for r in rows:
+        d = r["n_devices"]
+        lines.append(
+            f"fleet_cohort/d{d},"
+            f"{r['tick_us']:.1f},"
+            f"devices_per_sec={r['devices_per_sec']:.0f};"
+            f"arena_mb={r['arena_mb']:.0f};"
+            f"merge_us={r['merge_us']:.1f};"
+            f"tier1_bytes={r['tier1_bytes_per_round']};"
+            f"tier2_bytes={r['tier2_bytes_per_round']};"
+            f"tier2_reduction={r['tier2_reduction']:.0f}x"
+        )
+        metrics[f"paged_tick_d{d}_us"] = r["tick_us"]
+        metrics[f"two_tier_merge_d{d}_us"] = r["merge_us"]
+        metrics[f"tier2_reduction_d{d}_ratio"] = r["tier2_reduction"]
+        # the overlay traffic claim, mechanically: tier 2 carries orders
+        # of magnitude fewer bytes than the flat round at every scale
+        assert r["tier2_bytes_per_round"] * 100 < r["flat_bytes_per_round"], r
+    if gate:
+        record_and_gate("fleet_cohort", metrics, path=history_path)
+    else:
+        record("fleet_cohort", metrics, path=history_path)
+    lines.append(
+        f"# cohort-bench artifact → {out_path} (history → {history_path})"
+    )
+    return lines
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI leg: D=131072 (≥10⁵ devices) only",
+    )
+    ap.add_argument(
+        "--full", action="store_true",
+        help="the million-device point: D=1048576",
+    )
+    ap.add_argument("--out", default="BENCH_fleet_cohort.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    args = ap.parse_args()
+    grid = (SMOKE_D, FULL_D) if args.full else (SMOKE_D,)
+    for line in main(grid, args.out, args.history, gate=True):
+        print(line)
+    print(f"# fleet_cohort ok — grid {grid}")

@@ -33,6 +33,7 @@ BENCHES = [
     ("ablation_hidden", "ours — detector width ablation (accuracy vs payload)"),
     ("robust_fleet", "ours — Byzantine-robust merges + fault-injection chaos soak"),
     ("serve_ingress", "ours — async serving front-end chaos-under-load soak"),
+    ("fleet_cohort", "ours — cohort-paged arena runtime at 10⁵–10⁶ devices"),
     ("roofline_report", "ours — dry-run roofline artifact summary"),
 ]
 

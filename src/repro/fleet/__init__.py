@@ -16,6 +16,14 @@ to a psum of O(clusters) segment sums per shard (``sharded``).
 Serve-loop integration still builds on the stacked-(U, V) layout
 defined here.
 """
+from repro.fleet.arena import (
+    CohortMerger,
+    CohortSchedule,
+    FleetArena,
+    TierCost,
+    cohort_round_cost,
+    init_arena,
+)
 from repro.fleet.faults import FAULT_KINDS, FaultInjector, FaultSpec
 from repro.fleet.robust import (
     RobustConfig,
@@ -54,7 +62,11 @@ from repro.fleet.quantize import (
     quantize_roundtrip,
     quantize_tiles,
 )
-from repro.fleet.sharded import fleet_merge_sharded, fleet_train_sharded
+from repro.fleet.sharded import (
+    cohort_tree_reduce,
+    fleet_merge_sharded,
+    fleet_train_sharded,
+)
 from repro.fleet.partition import (
     DriftEvent,
     FleetStreams,
@@ -73,6 +85,8 @@ from repro.fleet.topology import (
 )
 
 __all__ = [
+    "CohortMerger", "CohortSchedule", "FleetArena", "TierCost",
+    "cohort_round_cost", "cohort_tree_reduce", "init_arena",
     "FAULT_KINDS", "FaultInjector", "FaultSpec",
     "RobustConfig", "finite_payload_mask", "fleet_merge_robust",
     "payload_clip", "payload_outlier_scores", "robust_merge_from_w",

@@ -246,3 +246,57 @@ def fleet_merge_sharded(
         lambda: _shard_map(body, mesh, in_specs=(spec, spec), out_specs=spec),
     )
     return fn(states, jnp.asarray(cids))
+
+
+# ------------------------------------------- inter-cohort tier-2 reduction
+
+
+def _tree_fold(stack: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise binary-tree sum over the leading axis — the reduction
+    shape the cohort-head overlay actually ships (⌈log₂ n⌉ rounds of
+    pairwise exchanges), and the summation order the paged merge's
+    ≤1e-5 agreement with flat ``fleet_merge`` is stated against."""
+    while stack.shape[0] > 1:
+        n = stack.shape[0]
+        even = stack[0 : n - (n % 2) : 2] + stack[1::2]
+        if n % 2:
+            even = jnp.concatenate([even, stack[n - 1 :]], axis=0)
+        stack = even
+    return stack[0]
+
+
+def cohort_tree_reduce(
+    partials: jnp.ndarray,
+    mesh: Mesh | None = None,
+    axes: Sequence[str] = ("data",),
+) -> jnp.ndarray:
+    """Tier-2 of the two-tier cohort merge: reduce the stacked
+    per-cohort partial (U, V) sums ``(n_cohorts, R, C) → (R, C)``.
+
+    Eq. 8 is a sum, so the inter-cohort tier is pure reduction — on a
+    single device an explicit pairwise binary tree (``_tree_fold``), on
+    a mesh the cohort axis is sharded over ``axes``, each shard folds
+    its resident cohorts locally, and ONE ``psum`` of the O(Ñ(Ñ+m))
+    partial completes the tree — the collective never scales with the
+    number of cohorts, let alone devices."""
+    partials = jnp.asarray(partials)
+    if mesh is None:
+        fn = _cached_sharded_jit(("cohort_tree", partials.shape), lambda: _tree_fold)
+        return fn(partials)
+    n_shards = _mesh_axis_size(mesh, axes)
+    if partials.shape[0] % n_shards:
+        raise ValueError(
+            f"n_cohorts={partials.shape[0]} not divisible by "
+            f"{n_shards} mesh shards"
+        )
+
+    def body(local: jnp.ndarray) -> jnp.ndarray:
+        return jax.lax.psum(_tree_fold(local), tuple(axes))
+
+    fn = _cached_sharded_jit(
+        ("cohort_psum", mesh, tuple(axes), partials.shape),
+        lambda: _shard_map(
+            body, mesh, in_specs=(P(tuple(axes)),), out_specs=P()
+        ),
+    )
+    return fn(partials)

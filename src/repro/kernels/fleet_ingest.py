@@ -65,6 +65,7 @@ from repro.core.oselm import OSELMState
 __all__ = [
     "fleet_ingest",
     "fleet_ingest_kernel",
+    "fleet_ingest_paged",
     "fleet_ingest_xla",
     "ingest_padding",
     "resolve_backend",
@@ -395,6 +396,48 @@ def fleet_ingest_xla(
 
 
 # ------------------------------------------------------------------ dispatch
+
+
+def fleet_ingest_paged(
+    p: jnp.ndarray,
+    beta: jnp.ndarray,
+    alpha: jnp.ndarray,
+    bias: jnp.ndarray,
+    window: jnp.ndarray,
+    *,
+    activation: str = "sigmoid",
+    forget: float = 1.0,
+    backend: str = "auto",
+    block_d: int = 8,
+    block_t: int = 32,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paged entry of the fused ingest family: one arena page's raw
+    leaves instead of a stacked ``OSELMState``.
+
+    The cohort-paged runtime streams (C, Ñ, Ñ) + (C, Ñ, m) pages of a
+    host arena through the device while the (n, Ñ) shared SLFN basis
+    stays put — so the caller holds no pytree, just the four leaves.
+    This wrapper rebuilds the page as an ``OSELMState`` carrying the
+    UNSTACKED basis (``_shared_basis`` passes a 2-D (α, b) straight
+    through both lowerings; no per-device broadcast is materialized)
+    and returns raw leaves again: ``(P', β', losses)`` with the same
+    per-device pre-train drift scores as ``fleet_ingest``.
+    """
+    from repro.core.elm import SLFNParams
+
+    states = OSELMState(
+        params=SLFNParams(alpha=alpha, bias=bias),
+        beta=beta,
+        p=p,
+        activation=activation,
+        forget=forget,
+    )
+    trained, losses = fleet_ingest(
+        states, window, backend=backend,
+        block_d=block_d, block_t=block_t, interpret=interpret,
+    )
+    return trained.p, trained.beta, losses
 
 
 def fleet_ingest(

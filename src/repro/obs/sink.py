@@ -36,8 +36,14 @@ __all__ = ["TelemetryConfig", "TelemetrySink", "TICK_PHASES"]
 
 # the runtime tick's phase decomposition, in execution order;
 # "quantize" is the host-side precision-policy step of the quantized
-# payload path (the codec itself runs fused inside the merge jit)
-TICK_PHASES = ("poison", "ingest", "govern", "quantize", "merge", "snapshot")
+# payload path (the codec itself runs fused inside the merge jit);
+# "page_in"/"page_out" are the cohort-paged runtime's host↔device
+# transfer phases (staging a cohort's arena slice onto the device and
+# writing the updated slice back) — zero for the resident runtime
+TICK_PHASES = (
+    "poison", "page_in", "ingest", "page_out", "govern", "quantize",
+    "merge", "snapshot",
+)
 
 # detector band widths / loss ratios are dimensionless O(1) quantities
 _RATIO_BUCKETS = (1e-4, 1e-3, 1e-2, 0.1, 0.3, 1.0, 3.0, 10.0, 100.0)
@@ -94,6 +100,26 @@ class TelemetrySink:
         self.merge_bytes = r.counter(
             "merge_bytes_total", "merge payload traffic by wire precision",
             labels=("precision",),
+        )
+        # ---- cohort-paging catalog (the million-device arena runtime;
+        # zero-valued for the resident runtime, same registry so both
+        # runtimes share one exposition surface)
+        self.merge_tier_bytes = r.counter(
+            "merge_tier_bytes_total",
+            "two-tier merge traffic by tier (intra=within-cohort device "
+            "payloads, inter=cohort-head tree payloads)",
+            labels=("tier",),
+        )
+        self.cohort_pages = r.counter(
+            "cohort_pages_total", "cohort pages streamed through the device"
+        )
+        self.arena_bytes = r.gauge(
+            "arena_bytes", "host-side fleet arena footprint"
+        )
+        self.arena_resident_devices = r.gauge(
+            "arena_resident_devices",
+            "devices whose state is currently staged on the device "
+            "(the active cohort window), out of the arena's total",
         )
         self.detections = r.counter(
             "detections_total", "fresh drift-detector flags"

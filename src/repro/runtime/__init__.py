@@ -25,9 +25,11 @@ a crash flight recorder whose ring dumps (with the failing tick's
 inputs) on exception, non-finite payload rejection, or SLO breach —
 all host-side, so the compile-once property is unchanged.
 """
+from repro.runtime.cohort import CohortFleetRuntime
 from repro.runtime.detector import (
     DetectorConfig,
     DetectorState,
+    common_mode_ratio,
     detector_update,
     init_detector,
     quarantine_risk,
@@ -42,8 +44,9 @@ from repro.runtime.governor import (
 from repro.runtime.runtime import FleetRuntime, RuntimeConfig, TickReport
 
 __all__ = [
-    "DetectorConfig", "DetectorState", "detector_update", "init_detector",
-    "quarantine_risk",
+    "CohortFleetRuntime",
+    "DetectorConfig", "DetectorState", "common_mode_ratio",
+    "detector_update", "init_detector", "quarantine_risk",
     "TickFeed",
     "GovernorConfig", "GovernorState", "MergeDecision", "MergeGovernor",
     "FleetRuntime", "RuntimeConfig", "TickReport",

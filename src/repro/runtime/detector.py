@@ -132,6 +132,7 @@ def detector_update(
     *,
     rebase: jnp.ndarray | bool = False,
     participants: jnp.ndarray | None = None,
+    common: jnp.ndarray | None = None,
 ) -> tuple[DetectorState, jnp.ndarray, jnp.ndarray]:
     """One sequential-detection step on this tick's per-device losses.
 
@@ -149,6 +150,15 @@ def detector_update(
     once, while a genuinely drifted device's idiosyncratic spike towers
     over the median and still fires (one tick later). No flags rise on
     a rebase tick itself.
+
+    ``common`` overrides the in-trace fleet-median ratio with a
+    precomputed scalar. The cohort-paged runtime needs this: the median
+    is a FLEET-WIDE statistic, but a paged tick only ever sees one
+    cohort's slice of the detector bank — it computes the global median
+    between the ingest and detect passes (``common_mode_ratio``) and
+    feeds the same scalar to every cohort's update, which keeps paged
+    rebasing tick-identical with the resident path. ``None`` (the
+    resident default) computes it here, unchanged.
     """
     losses = jnp.asarray(losses, jnp.float32)
     if participants is None:
@@ -158,8 +168,11 @@ def detector_update(
 
     calibrated = state.count >= cfg.warmup
     valid = participants & ~state.drifted & calibrated
-    ratio = losses / jnp.maximum(state.mean, cfg.min_sigma)
-    common = jnp.nanmedian(jnp.where(valid, ratio, jnp.nan))
+    if common is None:
+        ratio = losses / jnp.maximum(state.mean, cfg.min_sigma)
+        common = jnp.nanmedian(jnp.where(valid, ratio, jnp.nan))
+    else:
+        common = jnp.asarray(common, jnp.float32)
     common = jnp.where(jnp.isfinite(common) & (common > 0), common, 1.0)
     do_rebase = rebase & valid
     state = state.replace(
@@ -241,6 +254,29 @@ def detector_update(
         drifted=drifted, recovery=recovery,
     )
     return new, drifted, fresh
+
+
+def common_mode_ratio(
+    state: DetectorState,
+    losses: jnp.ndarray,
+    cfg: DetectorConfig,
+    *,
+    participants: jnp.ndarray,
+) -> jnp.ndarray:
+    """The fleet-median (loss / baseline-mean) ratio over calibrated,
+    un-drifted participants — EXACTLY the scalar ``detector_update``
+    computes in-trace for its post-merge rebase. The cohort-paged
+    runtime calls this once on the full-fleet (D,) arrays between its
+    ingest and detect passes and passes the result as ``common=`` to
+    every per-cohort ``detector_update``; ``state`` must be the
+    PRE-update detector bank (the same state the update will consume).
+    Same f32 arithmetic as the in-trace path, so resident and paged
+    rebasing agree bit-for-bit."""
+    losses = jnp.asarray(losses, jnp.float32)
+    participants = jnp.asarray(participants).astype(bool)
+    valid = participants & ~state.drifted & (state.count >= cfg.warmup)
+    ratio = losses / jnp.maximum(state.mean, cfg.min_sigma)
+    return jnp.nanmedian(jnp.where(valid, ratio, jnp.nan))
 
 
 def quarantine_risk(state: DetectorState, cfg: DetectorConfig) -> jnp.ndarray:

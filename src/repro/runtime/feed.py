@@ -27,6 +27,7 @@ class TickFeed:
         self.streams = streams
         self.batch = batch
         self.n_ticks = steps // batch
+        self._warned_truncated = False
         tail = steps - self.n_ticks * batch
         if tail:
             # same contract as fleet_train_rounds: constant tick shapes
@@ -51,10 +52,41 @@ class TickFeed:
 
     def drift_ticks(self) -> dict[int, int]:
         """device -> tick at which its first scheduled drift event lands
-        (ground truth for detection-delay accounting)."""
+        (ground truth for detection-delay accounting).
+
+        Events whose step falls in the truncated tail (``tick >=
+        n_ticks``) never reach the runtime, so a device whose drift is
+        scheduled *only* there is excluded here — and must be excluded
+        from every consumer's denominator too (``truncated_drift_devices``
+        is the set ``detection_stats`` needs to stay consistent)."""
         out: dict[int, int] = {}
         for ev in sorted(self.streams.drift, key=lambda e: e.step):
             tick = ev.step // self.batch
             if ev.device not in out and tick < self.n_ticks:
                 out[ev.device] = tick
+        truncated = self.truncated_drift_devices
+        if truncated and not self._warned_truncated:
+            self._warned_truncated = True
+            import logging
+
+            logging.getLogger(__name__).warning(
+                "TickFeed.drift_ticks: drift for device(s) %s is scheduled "
+                "entirely past tick %d (the truncated tail) and will never "
+                "be served — excluding them from drift ground truth",
+                sorted(truncated), self.n_ticks,
+            )
         return out
+
+    @property
+    def truncated_drift_devices(self) -> frozenset[int]:
+        """Devices whose *every* scheduled drift event lands past the
+        last full tick: their drift is silently unservable, so detection
+        accounting must not count a flag on them as a false positive nor
+        their (never-delivered) drift as missed."""
+        first_served: set[int] = set()
+        scheduled: set[int] = set()
+        for ev in self.streams.drift:
+            scheduled.add(ev.device)
+            if ev.step // self.batch < self.n_ticks:
+                first_served.add(ev.device)
+        return frozenset(scheduled - first_served)

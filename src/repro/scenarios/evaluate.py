@@ -144,16 +144,28 @@ def pattern_loss_rows(
 
 
 def detection_stats(
-    detections: list[tuple[int, int]], drift_ticks: dict[int, int]
+    detections: list[tuple[int, int]],
+    drift_ticks: dict[int, int],
+    *,
+    truncated_devices: frozenset[int] | set[int] = frozenset(),
 ) -> dict:
     """Detection-delay accounting in the tick clock: flags BEFORE a
     device's scheduled drift are false positives (they fired on a
-    stationary stream); the first flag at/after it is the detection."""
+    stationary stream); the first flag at/after it is the detection.
+
+    ``truncated_devices`` (``TickFeed.truncated_drift_devices``) are
+    devices whose scheduled drift fell entirely in the feed's truncated
+    tail: their drift was never served, so a flag on them is neither a
+    detection nor a false positive — they are excluded from every
+    denominator and reported separately."""
+    truncated = frozenset(truncated_devices)
     flags_by_dev: dict[int, list[int]] = {}
     for tick, dev in detections:
         flags_by_dev.setdefault(dev, []).append(tick)
     delays, missed, false_pos = [], [], []
     for dev, flagged in flags_by_dev.items():
+        if dev in truncated:
+            continue
         if dev not in drift_ticks or min(flagged) < drift_ticks[dev]:
             false_pos.append(dev)
     for dev, t0 in drift_ticks.items():
@@ -169,6 +181,7 @@ def detection_stats(
         "delay_max": int(np.max(delays)) if delays else None,
         "missed": sorted(missed),
         "false_positives": sorted(false_pos),
+        "truncated_drift_devices": sorted(truncated),
     }
 
 
@@ -312,7 +325,10 @@ def run_scenario(
         merged_aucs=merged_aucs,
         merges=rt.governor.state.merges,
         comm_bytes=rt.governor.state.bytes_spent,
-        detection=detection_stats(rt.detections, feed.drift_ticks()),
+        detection=detection_stats(
+            rt.detections, feed.drift_ticks(),
+            truncated_devices=feed.truncated_drift_devices,
+        ),
         reports=reports,
         jit_cache_sizes=rt.assert_compile_once(),
         payload_precision=payload_precision,

@@ -95,6 +95,22 @@ class WindowBuilder:
         if self.depth == 0:
             return None
         d, b, f = self.n_devices, self.batch, self.n_features
+        # Head-blocked scan BEFORE any queue mutation: a head request
+        # that alone exceeds the window budget can never ride ANY window
+        # (every later close hits the same head), so padding around it
+        # would leak it in `depth` forever. Raising pre-mutation keeps
+        # the depth invariant exact — no request was popped yet.
+        for dev in range(d):
+            q = self.pending[dev]
+            if q and q[0].n_samples > b:
+                head = q[0]
+                raise ValueError(
+                    f"head-blocked queue on device {dev}: request "
+                    f"{head.request_id} carries {head.n_samples} samples "
+                    f"but the window budget is {b}; it can never be "
+                    f"dispatched (admission via add() caps bursts at the "
+                    f"budget — this request bypassed it)"
+                )
         batch = np.empty((d, b, f), np.float32)
         served = np.zeros(d, bool)
         taken: list[SampleRequest] = []
@@ -114,12 +130,6 @@ class WindowBuilder:
                 taken.append(req)
                 rows.append(req.x)
                 used += req.n_samples
-            if used == 0:
-                # head request alone exceeds the window budget — cannot
-                # happen through add() (can_fit caps bursts at B), kept
-                # as a guard for direct queue manipulation in tests
-                batch[dev] = self.fallback[dev]
-                continue
             dense = np.concatenate(rows, axis=0)
             n_samples += used
             if used < b:

@@ -17,6 +17,7 @@ snapshot), so the log stays bounded by the snapshot cadence.
 """
 from __future__ import annotations
 
+import logging
 import os
 import tempfile
 from pathlib import Path
@@ -67,12 +68,20 @@ class WriteAheadLog:
         return path
 
     def entries(self) -> list[int]:
-        """Logged seqs, ascending."""
+        """Logged seqs, ascending. A ``wal_*.npz`` name that does not
+        parse as a seq is skipped with a warning naming the file: a
+        corrupted rename would otherwise masquerade as a benign gap and
+        make the resulting ``replayable()`` failure undiagnosable."""
         seqs = []
         for p in self.dir.glob("wal_*.npz"):
             try:
                 seqs.append(int(p.stem.split("_")[1]))
             except (IndexError, ValueError):
+                logging.getLogger(__name__).warning(
+                    "WriteAheadLog: skipping malformed WAL filename %s "
+                    "(expected wal_<seq:08d>.npz) — if a replay gap "
+                    "follows, this file is the suspect", p,
+                )
                 continue
         return sorted(seqs)
 

@@ -492,6 +492,55 @@ def test_tick_feed_shapes_and_drift_ticks():
         TickFeed(fs, batch=27)
 
 
+def test_tick_feed_truncated_tail_drift(caplog):
+    """A drift event scheduled entirely in the dropped tail (steps=26,
+    batch=4 → ticks 0..5 serve steps [0, 24); step 25 is never dealt)
+    must be excluded from ground truth — not mapped to a phantom tick —
+    and the device reported as truncated so detection accounting skips
+    it in every denominator."""
+    import logging
+
+    train3, _ = _har3()
+    drift = (
+        DriftEvent(device=1, step=13, new_pattern=2),   # tick 3: served
+        DriftEvent(device=2, step=25, new_pattern=2),   # tail: never served
+    )
+    fs = make_fleet_streams(
+        train3, 4, 26, n_init=4, drift=drift, seed=0, n_assign=2
+    )
+    feed = TickFeed(fs, batch=4)
+    assert feed.n_ticks == 6
+    assert feed.truncated_drift_devices == frozenset({2})
+    with caplog.at_level(logging.WARNING, logger="repro.runtime.feed"):
+        ticks = feed.drift_ticks()
+        feed.drift_ticks()  # warned once, not per call
+    assert ticks == {1: 3}  # device 2 absent — NOT {2: 6}
+    warned = [r for r in caplog.records if "truncated tail" in r.message]
+    assert len(warned) == 1 and "[2]" in warned[0].getMessage()
+    # a device with one tail event and one served event is NOT truncated
+    fs2 = make_fleet_streams(
+        train3, 4, 26, n_init=4, seed=0, n_assign=2, drift=(
+            DriftEvent(device=2, step=9, new_pattern=2),
+            DriftEvent(device=2, step=25, new_pattern=1),
+        ),
+    )
+    feed2 = TickFeed(fs2, batch=4)
+    assert feed2.truncated_drift_devices == frozenset()
+    assert feed2.drift_ticks() == {2: 2}
+    # detection_stats: flags on the truncated device are neither
+    # detections nor false positives; its drift is not "missed"
+    from repro.scenarios import detection_stats
+
+    stats = detection_stats(
+        [(4, 1), (5, 2)], ticks,
+        truncated_devices=feed.truncated_drift_devices,
+    )
+    assert stats["delays"] == [1]          # device 1 caught at tick 4
+    assert stats["false_positives"] == []  # device 2's flag doesn't count
+    assert stats["missed"] == []
+    assert stats["truncated_drift_devices"] == [2]
+
+
 def test_runtime_rejects_mismatched_topology(drift_scenario):
     train3, fs, _, _, _ = drift_scenario
     fleet = init_fleet(

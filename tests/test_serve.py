@@ -10,6 +10,13 @@ import jax
 import numpy as np
 import pytest
 
+try:  # property-based in CI; deterministic sweep where hypothesis is absent
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 from repro.fleet import init_fleet, ring
 from repro.obs import TelemetryConfig
 from repro.runtime import FleetRuntime, GovernorConfig, RuntimeConfig
@@ -354,3 +361,99 @@ def test_frontend_requires_telemetry():
     bare = FleetRuntime(fleet, RuntimeConfig(topology=ring(D, hops=1)))
     with pytest.raises(ValueError, match="telemetry"):
         ServeFrontend(bare, ServeConfig(batch=B))
+
+
+# -------------------------------------------------- batcher edge cases
+
+
+def test_batcher_head_blocked_close_raises_pre_mutation():
+    """A head request larger than the window budget can never ride any
+    window; close() must raise BEFORE popping anything so the depth
+    invariant (Σ queue lengths == depth) survives the failed close."""
+    wb = _builder()
+    wb.add(_req(device=1, k=1, seed=1))
+    wb.add(_req(device=4, k=2, seed=2))
+    oversized = SampleRequest(
+        device=4, x=_rng(3).normal(size=(B + 2, F)).astype(np.float32)
+    )
+    wb.pending[4].appendleft(oversized)  # bypasses add()'s burst cap
+    wb.depth += 1
+    before = [list(q) for q in wb.pending]
+    with pytest.raises(ValueError, match="head-blocked"):
+        wb.close(0)
+    # nothing was dequeued: queues and depth are exactly pre-close
+    assert [list(q) for q in wb.pending] == before
+    assert wb.depth == sum(len(q) for q in wb.pending) == 3
+    # unblocking the head lets the very next close drain normally
+    assert wb.pending[4].popleft() is oversized
+    wb.depth -= 1
+    w = wb.close(0)
+    assert w.n_requests == 2
+    assert wb.depth == 0
+
+
+def _check_window_partition(bursts, closes_between):
+    """WindowBuilder invariants under an arbitrary admit/close script:
+    depth always equals Σ queue lengths, and every admitted request
+    lands in EXACTLY one window (no loss, no double-dispatch)."""
+    wb = _builder()
+    admitted: list[str] = []
+    dispatched: list[str] = []
+    seq = 0
+    script = list(bursts)
+    while script or wb.depth:
+        for device, k in script[:closes_between]:
+            r = _req(device=device, k=k, seed=len(admitted))
+            wb.add(r)
+            admitted.append(r.request_id)
+            assert wb.depth == sum(len(q) for q in wb.pending)
+        script = script[closes_between:]
+        w = wb.close(seq, allow_merge=bool(seq % 2))
+        seq += 1
+        if w is not None:
+            dispatched.extend(r.request_id for r in w.requests)
+            assert w.served.sum() > 0
+            assert w.n_samples <= D * B
+        assert wb.depth == sum(len(q) for q in wb.pending)
+        assert len(set(dispatched)) == len(dispatched), "double-dispatch"
+    assert wb.close(seq) is None  # drained: empty tick, no window
+    assert sorted(dispatched) == sorted(admitted), "lost or dropped request"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=50)
+    @given(
+        bursts=st.lists(
+            st.tuples(st.integers(0, D - 1), st.integers(1, B)),
+            max_size=24,
+        ),
+        closes_between=st.integers(1, 6),
+    )
+    def test_batcher_partition_property(bursts, closes_between):
+        _check_window_partition(bursts, closes_between)
+else:
+    @pytest.mark.parametrize("seed,n,closes_between", [
+        (0, 0, 1), (1, 7, 1), (2, 24, 2), (3, 24, 5), (4, 13, 3), (5, 24, 6),
+    ])
+    def test_batcher_partition_property(seed, n, closes_between):
+        rng = _rng(seed)
+        bursts = [
+            (int(rng.integers(0, D)), int(rng.integers(1, B + 1)))
+            for _ in range(n)
+        ]
+        _check_window_partition(bursts, closes_between)
+
+
+def test_wal_warns_on_malformed_filename(tmp_path, caplog):
+    wal = WriteAheadLog(tmp_path)
+    wb = _builder()
+    wb.add(_req(device=0, k=1, seed=0))
+    wal.append(wb.close(3))
+    (tmp_path / "wal_corrupted.npz").write_bytes(b"junk")
+    import logging
+
+    with caplog.at_level(logging.WARNING, logger="repro.serve.wal"):
+        assert wal.entries() == [3]  # junk skipped, real entry kept
+    assert any("wal_corrupted.npz" in rec.message for rec in caplog.records)
+    # replay over the surviving entries still works end to end
+    assert wal.replayable(3) == [3]
